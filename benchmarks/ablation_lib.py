@@ -1,0 +1,161 @@
+"""Shared machinery for the paper-reproduction experiments (Figs. 7/9/10, Tables 1-2).
+
+Methods (paper §5 notation):
+    traditional — train ideal (noise-unaware), deploy on analog EMT
+    A           — device-enhanced dataset (noise-aware training), fixed rho
+    A+B         — + energy regularization (trainable rho, lambda sweep)
+    A+B+C       — + low-fluctuation bit-serial decomposition
+
+Dataset note: CIFAR/ImageNet are not on this box; experiments run on the
+deterministic synthetic image task (repro.data.SyntheticImages) — orderings and
+trends are the reproduction target, not absolute accuracies (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import vgg_small, resnet_small
+from repro.configs.common import emt_preset
+from repro.core.emt_linear import EMTConfig
+from repro.core.quant import QuantConfig
+from repro.core.noise import NoiseConfig
+from repro.core.device import DeviceModel
+from repro.data.synthetic import SyntheticImages
+from repro.models import cnn
+from repro.models.context import Ctx
+from repro.nn.param import init_params
+from repro.train.optimizer import Optimizer, OptimizerConfig
+
+
+def _emt(mode, rho, trainable, intensity="normal"):
+    return EMTConfig(
+        mode=mode, quant=QuantConfig(8, 8, True),
+        noise=NoiseConfig(backend="hash"),
+        device=DeviceModel(intensity=intensity),
+        rho_init=rho, trainable_rho=trainable)
+
+
+def method_config(base_cfg, method: str, rho: float, intensity="normal"):
+    if method == "traditional":
+        emt = EMTConfig(mode="ideal", quant=QuantConfig(8, 8, True))
+    elif method == "A":
+        emt = _emt("analog", rho, trainable=False, intensity=intensity)
+    elif method == "A+B":
+        emt = _emt("analog", rho, trainable=True, intensity=intensity)
+    elif method == "A+B+C":
+        emt = _emt("bitserial", rho, trainable=True, intensity=intensity)
+    else:
+        raise ValueError(method)
+    return dataclasses.replace(base_cfg, emt=emt)
+
+
+def train_cnn(cfg, *, steps=200, batch=32, lr=5e-3, lam=0.0, seed=0):
+    data = SyntheticImages(num_classes=cfg.num_classes,
+                           image_size=cfg.image_size, seed=seed)
+    params = init_params(cnn.specs(cfg), jax.random.PRNGKey(seed))
+    opt = Optimizer(OptimizerConfig(name="adamw"))
+    ost = opt.init(params)
+
+    @jax.jit
+    def step(params, ost, images, labels, s):
+        ctx = Ctx(seed=s)
+
+        def loss_fn(p):
+            return cnn.loss_fn(p, {"images": images, "labels": labels},
+                               cfg, ctx, lam=lam)
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, ost = opt.update(g, ost, params, lr, s.astype(jnp.int32))
+        return params, ost, m
+
+    for s in range(steps):
+        b = data.batch(batch, s)
+        params, ost, m = step(params, ost, jnp.asarray(b["images"]),
+                              jnp.asarray(b["labels"]), jnp.uint32(s))
+    return params
+
+
+def evaluate(cfg, params, *, batches=8, batch=64, seed=10_000):
+    """Accuracy + mean per-inference EMT energy (uJ) under fresh fluctuations."""
+    data = SyntheticImages(num_classes=cfg.num_classes,
+                           image_size=cfg.image_size, seed=0)
+    ctx_seed = seed
+
+    @jax.jit
+    def fwd(params, images, s):
+        logits, aux = cnn.forward(params, images, cfg, Ctx(seed=s))
+        return logits, aux["energy_pj"]
+
+    accs, energies = [], []
+    for i in range(batches):
+        b = data.batch(batch, i, split="test")
+        logits, e = fwd(params, jnp.asarray(b["images"]),
+                        jnp.uint32(ctx_seed + i))
+        accs.append(float(jnp.mean(
+            (jnp.argmax(logits, -1) == jnp.asarray(b["labels"]))
+            .astype(jnp.float32))))
+        energies.append(float(e) / batch)   # per-image pJ
+    return float(np.mean(accs)), float(np.mean(energies)) * 1e-6  # -> uJ
+
+
+def run_method(base_cfg, method, *, rho=4.0, lam=1e-7, steps=120,
+               intensity="normal", eval_rho=None, seed=0):
+    """Train once, evaluate deployed-on-EMT. Returns dict of results."""
+    cfg = method_config(base_cfg, method, rho, intensity)
+    t0 = time.time()
+    params = train_cnn(cfg, steps=steps, lam=lam if "B" in method else 0.0,
+                       seed=seed)
+    train_s = time.time() - t0
+
+    # deployment config: traditional deploys on analog hardware at eval_rho
+    if method == "traditional":
+        dep = dataclasses.replace(
+            cfg, emt=_emt("analog", eval_rho or rho, trainable=False,
+                          intensity=intensity))
+        # graft a rho param for evaluation
+        dep_params = _with_rho(dep, params)
+    else:
+        dep, dep_params = cfg, params
+    acc, energy = evaluate(dep, dep_params)
+    rho_final = _mean_rho(dep, dep_params)
+    return {"method": method, "acc": acc, "energy_uj": energy,
+            "rho": rho_final, "train_s": round(train_s, 1), "lam": lam}
+
+
+def _with_rho(cfg, params):
+    """Graft trained (ideal) weights into the deployment spec that adds rho_raw."""
+    ref = init_params(cnn.specs(cfg), jax.random.PRNGKey(0))
+    flat_ref, _ = jax.tree_util.tree_flatten_with_path(ref)
+    flat_old = dict(_walk(params))
+    leaves = []
+    for path, leaf in flat_ref:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        leaves.append(flat_old.get(key, leaf))   # new rho_raw keeps its init
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(ref), leaves)
+
+
+def _walk(tree, prefix=""):
+    import jax as _jax
+    flat, _ = _jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        yield key, leaf
+
+
+def _find(params, key, default):
+    for k, v in _walk(params):
+        if k.endswith(key):
+            return v
+    return default
+
+
+def _mean_rho(cfg, params):
+    from repro.core.regularizer import rho_from_raw
+    vals = [float(rho_from_raw(v)) for k, v in _walk(params)
+            if k.endswith("rho_raw")]
+    return float(np.mean(vals)) if vals else float("nan")

@@ -1,0 +1,45 @@
+"""Paper-faithful reproduction driver (Figs. 7/9/10 in one run).
+
+    PYTHONPATH=src python examples/paper_repro.py [--steps 150]
+
+Trains the paper's CNN family under the four regimes (traditional / A / A+B /
+A+B+C) on the synthetic image task, evaluates each deployed on simulated EMT,
+and prints the Fig. 9-style comparison plus the Fig. 10 robustness sweep.
+"""
+import argparse
+import time
+
+from benchmarks.ablation_lib import run_method
+from repro.configs.paper_cnn import vgg_small, resnet_small
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=220)
+    args = ap.parse_args()
+
+    print("== Fig. 9 ablation (vgg family, synthetic images) ==")
+    print(f"{'method':12s} {'acc':>6s} {'energy_uJ':>10s} {'rho':>6s}")
+    rows = {}
+    for method, kw in [("traditional", dict(rho=4.0, eval_rho=4.0)),
+                       ("A", dict(rho=4.0)),
+                       ("A+B", dict(rho=4.0, lam=3e-8)),
+                       ("A+B+C", dict(rho=4.0, lam=3e-8))]:
+        r = run_method(vgg_small(), method, steps=args.steps, **kw)
+        rows[method] = r
+        print(f"{method:12s} {r['acc']:6.3f} {r['energy_uj']:10.4f} "
+              f"{r['rho']:6.2f}")
+    print(f"-> A+B+C energy reduction vs A+B: "
+          f"{rows['A+B']['energy_uj']/max(rows['A+B+C']['energy_uj'],1e-9):.1f}x "
+          f"(paper: ~1 order of magnitude, Table 1)")
+
+    print("\n== Fig. 10 robustness (resnet family) ==")
+    for intensity in ("weak", "normal", "strong"):
+        r = run_method(resnet_small(), "A+B", rho=4.0, lam=3e-8,
+                       steps=args.steps // 2, intensity=intensity)
+        print(f"intensity={intensity:7s} acc={r['acc']:.3f} "
+              f"energy={r['energy_uj']:.4f}uJ rho={r['rho']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

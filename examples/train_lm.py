@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-parameter EMT-aware LM for a few hundred
+steps with the fault-tolerant loop (checkpoint/resume, watchdog, async saves).
+
+    PYTHONPATH=src python examples/train_lm.py --preset full   # ~100M params
+    PYTHONPATH=src python examples/train_lm.py --preset small  # CPU-friendly
+
+The `full` preset is the deliverable configuration (100M, a few hundred steps);
+on a TPU slice it runs in minutes. On this CPU-only box use `small` (same code
+path, ~8M params) or set --steps down. Progress/metrics stream to JSONL; kill
+-TERM the process to watch the preemption-safe checkpoint kick in, re-run to
+resume.
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.emt_linear import EMTConfig
+from repro.configs.common import emt_preset
+from repro.data.synthetic import SyntheticLM
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import TrainConfig, make_train_step, init_state
+from repro.train.loop import LoopConfig, train_loop
+
+PRESETS = {
+    # ~103M params: 12L x d768 x ff2048, 32k vocab
+    "full": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=2048, vocab_size=32768, batch=16, seq=512),
+    # ~3M params: CPU-friendly, same family
+    "small": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                  head_dim=64, d_ff=512, vocab_size=512, batch=8, seq=128),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="small")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lam", type=float, default=1e-6)
+    ap.add_argument("--emt-mode", default="analog")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}", family="dense",
+        num_layers=p["num_layers"], d_model=p["d_model"],
+        num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+        head_dim=p["head_dim"], d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+        dtype=jnp.float32, emt=emt_preset(args.emt_mode), remat=False)
+
+    from repro.models import lm as lmod
+    from repro.nn.param import abstract_params
+    from repro.utils import tree_param_count
+    n = tree_param_count(abstract_params(lmod.specs(cfg)))
+    print(f"[train_lm] {cfg.name}: {n/1e6:.1f}M params, EMT={args.emt_mode}, "
+          f"steps={args.steps}")
+
+    tcfg = TrainConfig(lam=args.lam, lr=2e-3, warmup=max(10, args.steps // 20),
+                       total_steps=args.steps,
+                       opt=OptimizerConfig(name="adamw"))
+    step_fn, opt = make_train_step(cfg, tcfg, None, None)
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=p["seq"],
+                       batch_size=p["batch"])
+
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt_dir, log_every=10,
+                      metrics_path=os.path.join(args.ckpt_dir,
+                                                "metrics.jsonl"))
+    state, history = train_loop(state, jitted, data.batch_at, lcfg)
+    if len(history) >= 2:
+        print(f"[train_lm] ce {history[0]['ce']:.3f} -> {history[-1]['ce']:.3f} "
+              f"(energy {history[-1]['energy_uj']:.1f} uJ/step, "
+              f"rho {history[-1]['rho_mean']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

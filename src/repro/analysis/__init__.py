@@ -1,0 +1,2 @@
+from repro.analysis.hlo import analyze_collectives, shape_bytes
+from repro.analysis.roofline import Roofline, model_flops, active_params

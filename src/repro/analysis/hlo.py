@@ -1,0 +1,92 @@
+"""Optimized-HLO text analysis: collective bytes, op census, loop detection.
+
+Input is ``compiled.as_text()`` — the *post-SPMD-partitioning* per-device program,
+so every parsed payload is a per-chip quantity.  Conventions (DESIGN.md §7):
+
+* bytes counted are the **operand** sizes entering each collective:
+    - all-reduce / all-to-all / collective-permute: operand == output shape
+    - all-gather: operand == output / group_size (each chip contributes a shard)
+    - reduce-scatter: operand == output * group_size
+* dry-run graphs are loop-free by construction; any residual `while` op makes the
+  analysis untrustworthy and is surfaced as ``num_while`` (asserted 0 upstream).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_WHILE_RE = re.compile(r"=\s+(\([^)]*\)|\S+)\s+while\(")
+
+
+def shape_bytes(shape_str: str) -> float:
+    """bytes of 'f32[128,256]' or a '(f32[..], s32[..])' tuple string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def analyze_collectives(hlo_text: str) -> dict:
+    """Sum per-chip collective operand bytes by op type; census + diagnostics."""
+    by_type = defaultdict(float)
+    count = defaultdict(int)
+    top = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue                      # async pair: count the -start only
+        shape_str, op = m.group(1), m.group(2)
+        out_bytes = shape_bytes(shape_str)
+        g = _group_size(line)
+        if op == "all-gather":
+            operand = out_bytes / g
+        elif op == "reduce-scatter":
+            operand = out_bytes * g
+        else:
+            operand = out_bytes
+        by_type[op] += operand
+        count[op] += 1
+        top.append((operand, op, shape_str.strip()[:80], g))
+    top.sort(reverse=True)
+    return {
+        "collective_bytes_per_chip": float(sum(by_type.values())),
+        "bytes_by_type": {k: float(v) for k, v in by_type.items()},
+        "count_by_type": dict(count),
+        "top_collectives": [
+            {"bytes": float(b), "op": o, "shape": s, "group": g}
+            for b, o, s, g in top[:12]],
+        "num_while": len(_WHILE_RE.findall(hlo_text)),
+    }

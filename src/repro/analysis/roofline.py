@@ -1,0 +1,77 @@
+"""Roofline model for TPU v5e (the target hardware; this box only compiles).
+
+    compute_s    = HLO_FLOPs_global   / (chips * 197e12)     [bf16 MXU peak]
+    memory_s     = HLO_bytes_global   / (chips * 819e9)      [HBM]
+    collective_s = collective_bytes_global / (chips * 50e9)  [per-link ICI]
+
+``cost_analysis``/HLO parsing yield *per-chip* numbers (spike-verified); globals
+are per-chip x chips, so the chips cancel — the terms are per-chip seconds. The
+dominant term is the bottleneck; `model_flops / hlo_flops` measures how much of
+the compiled compute is algorithmically useful (remat / noise-sim / dispatch
+overheads show up here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """Analytic useful FLOPs per step: 6*N*D train, 2*N*D forward."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg, n_params: int, spec_tree=None) -> int:
+    """Params touched per token (MoE: k of E experts)."""
+    if cfg.num_experts and cfg.experts_per_token:
+        # expert share of parameters
+        E, K = cfg.num_experts, cfg.experts_per_token
+        F = cfg.moe_d_ff or cfg.d_ff
+        n_moe_layers = sum(cfg.moe_layer_mask())
+        expert_params = n_moe_layers * E * 3 * cfg.d_model * F
+        return int(n_params - expert_params * (1 - K / E))
+    return n_params
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    chips: int
+    model_flops_global: float
+
+    def terms(self) -> dict:
+        compute_s = self.flops_per_chip / PEAK_FLOPS
+        memory_s = self.bytes_per_chip / HBM_BW
+        coll_s = self.coll_bytes_per_chip / ICI_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": coll_s}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        hlo_flops_global = self.flops_per_chip * self.chips
+        useful = (self.model_flops_global / hlo_flops_global
+                  if hlo_flops_global else 0.0)
+        # roofline fraction: useful-compute time / bound time (how close the
+        # step is to the compute roofline if overheads vanished)
+        ideal_s = self.model_flops_global / (self.chips * PEAK_FLOPS)
+        return dict(
+            terms,
+            dominant=dom,
+            step_time_lower_bound_s=bound,
+            model_flops_global=self.model_flops_global,
+            hlo_flops_global=hlo_flops_global,
+            useful_flops_ratio=useful,
+            ideal_compute_s=ideal_s,
+            roofline_fraction=(ideal_s / bound) if bound > 0 else 0.0,
+        )

@@ -1,0 +1,44 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own CNNs.
+
+    from repro.configs import get_config, ARCHS
+    cfg = get_config("llama3-405b", emt_mode="analog")
+    cfg = get_config("llama3-405b", smoke=True)
+"""
+from __future__ import annotations
+
+from repro.configs.common import emt_preset, shrink
+from repro.configs import (jamba_v0_1_52b, qwen2_vl_72b, moonshot_v1_16b_a3b,
+                           llama4_scout_17b_a16e, xlstm_350m, deepseek_67b,
+                           gemma3_1b, llama3_405b, gemma2_9b,
+                           seamless_m4t_medium, paper_cnn)
+
+ARCHS = {
+    "jamba-v0.1-52b": jamba_v0_1_52b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "xlstm-350m": xlstm_350m,
+    "deepseek-67b": deepseek_67b,
+    "gemma3-1b": gemma3_1b,
+    "llama3-405b": llama3_405b,
+    "gemma2-9b": gemma2_9b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+}
+
+# shapes each arch runs (assignment rules; see DESIGN.md §5):
+# long_500k only for SSM/hybrid archs; all archs here have decoders.
+LONG_CONTEXT_ARCHS = ("jamba-v0.1-52b", "xlstm-350m")
+
+
+def arch_shapes(name: str):
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if name in LONG_CONTEXT_ARCHS:
+        shapes.append("long_500k")
+    return shapes
+
+
+def get_config(name: str, *, emt_mode: str = "analog", rng: str = "hash",
+               intensity: str = "normal", smoke: bool = False, **emt_kw):
+    mod = ARCHS[name]
+    emt = emt_preset(emt_mode, rng=rng, intensity=intensity, **emt_kw)
+    return mod.smoke(emt) if smoke else mod.build(emt)

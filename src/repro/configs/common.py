@@ -1,0 +1,64 @@
+"""Config helpers: EMT presets and smoke-scale reduction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.emt_linear import EMTConfig, IDEAL
+from repro.core.quant import QuantConfig
+from repro.core.noise import NoiseConfig
+from repro.models.config import ModelConfig
+
+
+def emt_preset(mode: str = "analog", rng: str = "hash",
+               intensity: str = "normal", rho_init: float = 4.0,
+               energy_accounting: str = "full",
+               store_int8: bool = False) -> EMTConfig:
+    """Standard EMT configuration used by training/serving/dry-run."""
+    if mode == "ideal":
+        return IDEAL
+    from repro.core.device import DeviceModel
+    return EMTConfig(
+        mode=mode,
+        quant=QuantConfig(w_bits=8, a_bits=8, enabled=True),
+        noise=NoiseConfig(backend=rng, granularity="per_step"),
+        device=DeviceModel(intensity=intensity),
+        rho_init=rho_init,
+        energy_accounting=energy_accounting,
+        store_int8=store_int8,
+    )
+
+
+def shrink(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family smoke config: tiny widths, few layers/experts, CPU fp32.
+
+    Keeps the structural signature (pattern, GQA ratio, MoE top-k, enc-dec,
+    softcaps, rope flavor) so smoke tests exercise the same code paths.
+    """
+    heads = max(2, min(4, cfg.num_heads))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    if cfg.num_kv_heads == cfg.num_heads:
+        kv = heads                                   # preserve MHA
+    elif cfg.num_kv_heads == 1:
+        kv = 1                                       # preserve MQA (gemma3)
+    pattern = cfg.layer_pattern
+    layers = min(cfg.num_layers, max(2, len(pattern)))
+    kw = dict(
+        num_layers=layers,
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token,
+                              min(cfg.num_experts, 4)) if cfg.num_experts else 0,
+        moe_d_ff=64 if cfg.moe_d_ff else 0,
+        sliding_window=8 if cfg.sliding_window else 0,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        dtype=jnp.float32,
+        mrope_sections=(2, 3, 3) if cfg.rope_type == "mrope" else
+        cfg.mrope_sections,
+    )
+    kw.update(overrides)
+    return cfg.replace(name=cfg.name + "-smoke", **kw)

@@ -1,0 +1,32 @@
+"""The paper's own evaluation models — VGG/ResNet family for 32x32 images.
+
+`vgg16_cifar` / `resnet18_cifar` follow the paper's CIFAR-10 experiments (§5,
+Table 1).  `*_small` variants are CPU-trainable reductions used by the in-repo
+reproduction runs (examples/paper_repro.py) — same code path, fewer channels.
+"""
+from repro.models.cnn import CNNConfig
+from repro.configs.common import emt_preset
+
+
+def vgg16_cifar(emt=None) -> CNNConfig:
+    return CNNConfig(name="vgg16_cifar", arch="vgg",
+                     channels=(64, 128, 256), blocks_per_stage=2,
+                     num_classes=10, emt=emt or emt_preset())
+
+
+def resnet18_cifar(emt=None) -> CNNConfig:
+    return CNNConfig(name="resnet18_cifar", arch="resnet",
+                     channels=(64, 128, 256), blocks_per_stage=2,
+                     num_classes=10, emt=emt or emt_preset())
+
+
+def vgg_small(emt=None) -> CNNConfig:
+    return CNNConfig(name="vgg_small", arch="vgg",
+                     channels=(16, 32), blocks_per_stage=1,
+                     num_classes=4, image_size=16, emt=emt or emt_preset())
+
+
+def resnet_small(emt=None) -> CNNConfig:
+    return CNNConfig(name="resnet_small", arch="resnet",
+                     channels=(16, 32), blocks_per_stage=1,
+                     num_classes=4, image_size=16, emt=emt or emt_preset())

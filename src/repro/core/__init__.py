@@ -1,0 +1,6 @@
+"""Core: the paper's contribution — EMT device model + techniques A/B/C."""
+from repro.core.device import DeviceModel, DEFAULT_DEVICE, four_state_device, INTENSITY_SCALE
+from repro.core.noise import NoiseConfig, fluctuate
+from repro.core.quant import QuantConfig, fake_quant, quant_levels
+from repro.core.emt_linear import EMTConfig, IDEAL, emt_dense, dense_specs, new_aux, add_aux
+from repro.core import decompose, regularizer, hashrng

@@ -1,0 +1,116 @@
+"""EMT device model — random-telegraph-noise (RTN) read fluctuation + energy.
+
+The paper (§3, Fig. 2) models an analog EMT cell storing weight ``w`` with energy
+coefficient ``rho``:
+
+* a read returns ``r_l(w, rho)`` where ``l`` is the cell's (random) RTN state,
+* the *fluctuation amplitude* (std of the read relative to ``w``) shrinks as ``rho``
+  grows (Ielmini et al. [25]: RTN relative amplitude decreases with programming
+  current/energy),
+* read energy is proportional to ``rho`` and the stored weight magnitude
+  (Fig. 2(a), Eq. 13/19): ``E_read = rho * |w| * x_level``.
+
+We parametrize states symmetrically:
+
+    r_l(w, rho) = w * (1 + a_l * sigma_rel(rho)),   sigma_rel(rho) = A / rho**beta
+
+with state offsets ``a_l`` and probabilities ``p_l`` normalized so that
+``sum_l p_l a_l = 0`` (unbiased reads) and ``sum_l p_l a_l^2 = 1`` (``sigma_rel`` *is*
+the relative std).  The two-state 50/50 case of Fig. 2(b) is ``a = (-1, +1)``.
+
+Everything is a plain dataclass of floats + tuples so it can be closed over by jitted
+functions without becoming a traced value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Fluctuation-intensity presets (paper §5.2, Fig. 10: weak / normal / strong).
+INTENSITY_SCALE = {"weak": 0.5, "normal": 1.0, "strong": 2.0}
+
+
+def _normalize_states(offsets: Tuple[float, ...], probs: Tuple[float, ...]):
+    """Shift/scale state offsets so reads are unbiased with unit relative variance."""
+    a = np.asarray(offsets, np.float64)
+    p = np.asarray(probs, np.float64)
+    p = p / p.sum()
+    a = a - (p * a).sum()
+    var = (p * a * a).sum()
+    if var > 0:
+        a = a / math.sqrt(var)
+    return tuple(float(v) for v in a), tuple(float(v) for v in p)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Parametric RTN model of one EMT technology corner."""
+    # sigma_rel(rho) = amplitude * intensity_scale / rho**beta
+    amplitude: float = 0.08
+    beta: float = 0.5
+    intensity: str = "normal"
+    # RTN states (offsets are re-normalized to zero-mean / unit-variance).
+    state_offsets: Tuple[float, ...] = (-1.0, 1.0)
+    state_probs: Tuple[float, ...] = (0.5, 0.5)
+    # Energy model: E_mac = e_mac * rho * |w| * x_level   [pJ]
+    #               E_peripheral = e_read * (#row reads)   [pJ]  (ADC/driver overhead —
+    # this is what makes depthwise/small-fan-in layers inefficient, paper §5.1).
+    e_mac: float = 0.05
+    e_read: float = 0.4
+    rho_min: float = 1e-3
+
+    def __post_init__(self):
+        a, p = _normalize_states(self.state_offsets, self.state_probs)
+        object.__setattr__(self, "state_offsets", a)
+        object.__setattr__(self, "state_probs", p)
+        if len(a) != len(p):
+            raise ValueError("state offsets/probs length mismatch")
+
+    @property
+    def num_states(self) -> int:
+        return len(self.state_offsets)
+
+    @property
+    def intensity_scale(self) -> float:
+        return INTENSITY_SCALE[self.intensity]
+
+    # ---- fluctuation ------------------------------------------------------
+    def sigma_rel(self, rho):
+        """Relative read std given energy coefficient rho (elementwise, traceable)."""
+        rho = jnp.maximum(rho, self.rho_min)
+        return self.amplitude * self.intensity_scale / jnp.power(rho, self.beta)
+
+    def read_value(self, w, rho, state_offset):
+        """r_l(w, rho) for a (sampled) normalized state offset a_l."""
+        return w * (1.0 + state_offset * self.sigma_rel(rho))
+
+    # ---- energy ------------------------------------------------------------
+    def mac_energy(self, rho, abs_w_sum, x_level_mean, n_reads_per_cell):
+        """Total MAC (cell) energy of reading a crossbar `n_reads_per_cell` times.
+
+        abs_w_sum:        sum(|w|) over the stored array
+        x_level_mean:     mean analog input level in [0, 1] (or mean popcount for
+                          bit-serial reads — Eq. 19)
+        n_reads_per_cell: alpha_t in Eq. 13 — how many times each cell is read.
+        """
+        return self.e_mac * rho * abs_w_sum * x_level_mean * n_reads_per_cell
+
+    def peripheral_energy(self, n_row_reads):
+        """Driver/ADC overhead proportional to the number of row-read operations."""
+        return self.e_read * n_row_reads
+
+    def with_intensity(self, intensity: str) -> "DeviceModel":
+        return dataclasses.replace(self, intensity=intensity)
+
+
+# A mildly multi-state corner (4-state RTN) used in robustness tests.
+def four_state_device(**kw) -> DeviceModel:
+    return DeviceModel(state_offsets=(-1.5, -0.5, 0.5, 1.5),
+                       state_probs=(0.15, 0.35, 0.35, 0.15), **kw)
+
+
+DEFAULT_DEVICE = DeviceModel()

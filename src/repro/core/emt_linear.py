@@ -1,0 +1,229 @@
+"""EMT dense layer — the paper's techniques A/B/C as a drop-in matmul.
+
+``emt_dense`` replaces every projection in the framework's models (attention QKV/O,
+GLU MLPs, MoE experts, routers, de/embeddings, SSM in/out projections, im2col convs).
+
+Modes
+-----
+* ``ideal``      — plain (optionally fake-quantized) matmul; the GPU/baseline.
+* ``analog``     — one crossbar read per MAC with RTN fluctuation (technique A), and
+                   a trainable per-layer energy coefficient rho (technique B).
+* ``bitserial``  — technique C: bit-serial decomposed reads with independent
+                   fluctuation per bit-plane (lower sigma *and* lower energy, at a
+                   latency cost).
+
+Every call returns ``(y, aux)`` where ``aux`` carries the differentiable
+energy-regularization term (Eq. 13), the analytic energy estimate in pJ, cell and
+read counts — aggregated up the model with :func:`add_aux`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device import DeviceModel, DEFAULT_DEVICE
+from repro.core.noise import NoiseConfig, fluctuate
+from repro.core.quant import QuantConfig, quantize_weights, quant_levels
+from repro.core import decompose, regularizer
+from repro.nn.param import ParamSpec, fan_in_init, constant_init
+
+
+@dataclasses.dataclass(frozen=True)
+class EMTConfig:
+    """How EMT simulation applies to the model's dense layers."""
+    mode: str = "ideal"                      # ideal | analog | bitserial
+    quant: QuantConfig = QuantConfig()
+    noise: NoiseConfig = NoiseConfig()
+    device: DeviceModel = DEFAULT_DEVICE
+    rho_init: float = 4.0
+    trainable_rho: bool = True
+    use_pallas: bool = False                 # kernels only run/validate on TPU or interpret
+    pallas_interpret: bool = False
+    crossbar_tile: int = 128                 # physical array tile (alpha accounting)
+    # "full": per-step sum|w| reductions (training needs them for the technique-B
+    # loss anyway). "off": skip in-step accounting — serving uses precomputed
+    # static per-layer sum|w| tables instead of re-reading all weights per token.
+    energy_accounting: str = "full"
+    # Beyond-paper serving optimization: store weights as int8 levels + per-column
+    # scale (exactly the conductance levels an EMT crossbar stores) and dequantize
+    # on-chip — halves weight HBM streaming for memory-bound decode. Serve-only.
+    store_int8: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "ideal"
+
+
+IDEAL = EMTConfig(mode="ideal", quant=QuantConfig(enabled=False))
+
+
+def _tag_plane(tag: str) -> int:
+    """Stable per-layer noise plane derived from the layer's name."""
+    return zlib.crc32(tag.encode()) & 0x7FFFFFF
+
+
+def _int8_init(base_init):
+    """Initialize int8 conductance levels by quantizing a float init."""
+    def init(key, shape, dtype):
+        wf = base_init(key, shape, jnp.float32)
+        scale = jnp.max(jnp.abs(wf), axis=0, keepdims=True) / 127.0
+        return jnp.clip(jnp.round(wf / jnp.maximum(scale, 1e-8)),
+                        -127, 127).astype(jnp.int8)
+    return init
+
+
+def dense_specs(d_in: int, d_out: int, cfg: EMTConfig, *,
+                axes=(None, None), dtype=jnp.float32, bias: bool = False,
+                init=None) -> dict:
+    """ParamSpec dict for one EMT dense layer (w [, b] [, rho_raw]).
+
+    With cfg.store_int8 (serve-only), `w` is stored as int8 conductance levels
+    plus a per-output-column fp32 scale — the exact representation an EMT
+    crossbar holds — halving weight HBM streaming vs bf16.
+    """
+    base_init = init or fan_in_init(fan_axis=0)
+    if cfg.active and cfg.store_int8:
+        specs = {
+            "w_int8": ParamSpec((d_in, d_out), jnp.int8, tuple(axes),
+                                _int8_init(base_init)),
+            "w_scale": ParamSpec((1, d_out), jnp.float32, (None, axes[1]),
+                                 constant_init(1.0 / 127.0)),
+        }
+    else:
+        specs = {
+            "w": ParamSpec((d_in, d_out), dtype, tuple(axes), base_init),
+        }
+    if bias:
+        specs["b"] = ParamSpec((d_out,), dtype, (axes[1],), constant_init(0.0))
+    if cfg.active:
+        specs["rho_raw"] = ParamSpec(
+            (), jnp.float32, (), constant_init(regularizer.rho_init_raw(cfg.rho_init)))
+    return specs
+
+
+def quantize_tree_for_serving(params):
+    """Convert a trained float checkpoint into int8 weight-streaming form:
+    every dict holding 'w' (+'rho_raw') becomes {'w_int8','w_scale',...}."""
+    if isinstance(params, dict):
+        if "w" in params and "rho_raw" in params:
+            w = params["w"].astype(jnp.float32)
+            scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0
+            q = jnp.clip(jnp.round(w / jnp.maximum(scale, 1e-8)),
+                         -127, 127).astype(jnp.int8)
+            out = {k: v for k, v in params.items() if k != "w"}
+            out["w_int8"] = q
+            out["w_scale"] = scale
+            return out
+        return {k: quantize_tree_for_serving(v) for k, v in params.items()}
+    return params
+
+
+def new_aux():
+    return {"energy_pj": jnp.float32(0.0), "reg": jnp.float32(0.0),
+            "reads": jnp.float32(0.0), "cells": 0, "rho_sum": jnp.float32(0.0),
+            "rho_layers": 0, "aux_loss": jnp.float32(0.0)}
+
+
+def add_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+def _tokens(x) -> int:
+    return int(np.prod(x.shape[:-1]))
+
+
+def emt_dense(params: dict, x, cfg: EMTConfig, *, tag: str,
+              seed=0, key: Optional[jax.Array] = None):
+    """Apply the layer. Returns (y, aux).
+
+    tag:  unique layer name — seeds the per-layer noise plane (hash backend) or the
+          fold_in constant (threefry backend).
+    seed: uint32 scalar (traced is fine) — typically derived from the training step,
+          so technique A sees fresh fluctuation data every batch.
+    """
+    int8_weights = "w_int8" in params
+    w = params["w_int8"] if int8_weights else params["w"]
+    aux = new_aux()
+    d_in, d_out = w.shape
+    plane = _tag_plane(tag)
+
+    if not cfg.active:
+        y = x @ w
+        if "b" in params:
+            y = y + params["b"]
+        return y, aux
+
+    rho = regularizer.rho_from_raw(params["rho_raw"])
+    if not cfg.trainable_rho:
+        rho = jax.lax.stop_gradient(rho)
+
+    # --- weights onto the crossbar: quantize (stored conductances) ----------
+    if int8_weights:
+        # already stored as conductance levels; dequantize on-chip (fuses into
+        # the matmul input on TPU — weight HBM traffic stays int8-sized)
+        wq = (w.astype(x.dtype) * params["w_scale"].astype(x.dtype))
+    else:
+        wq, _ = quantize_weights(w, cfg.quant)
+    # --- activations onto the input lines: quantized DAC levels -------------
+    levels, a_scale = quant_levels(x, cfg.quant.a_bits)
+
+    n_tokens = _tokens(x)
+    if cfg.mode == "analog":
+        if key is not None:
+            key = jax.random.fold_in(key, plane)
+        wn = fluctuate(wq, rho, cfg.device, cfg.noise, key=key,
+                       seed=seed, plane=plane)
+        y = (levels * a_scale) @ wn
+        # mean analog input level in LEVEL units (x = sum_p delta_p 2^p, Eq. 14) so
+        # it is directly comparable with the bit-serial popcount of Eq. 19.
+        x_level = jax.lax.stop_gradient(jnp.mean(jnp.abs(levels)))
+        reads_per_cell = float(n_tokens)
+    elif cfg.mode == "bitserial":
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops  # lazy: kernels depend on core
+            y_raw = kops.emt_bitserial_matmul(
+                levels.reshape(-1, d_in), wq, rho, device=cfg.device,
+                bits=cfg.quant.a_bits - 1, seed=seed, base_plane=plane,
+                interpret=cfg.pallas_interpret)
+            y_raw = y_raw.reshape(*x.shape[:-1], d_out)
+        else:
+            y_raw = decompose.bitserial_matmul_ref(
+                levels, wq, rho, cfg.device, cfg.quant.a_bits - 1,
+                seed=seed, base_plane=plane)
+        y = y_raw * a_scale
+        # energy counts actual bit reads (Eq. 19): popcount of levels
+        pops = decompose.popcount_levels(jnp.abs(levels), cfg.quant.a_bits - 1)
+        x_level = jax.lax.stop_gradient(jnp.mean(pops))
+        reads_per_cell = float(n_tokens)  # per bit handled via x_level popcount
+    else:
+        raise ValueError(f"unknown EMT mode {cfg.mode!r}")
+
+    if "b" in params:
+        y = y + params["b"]
+
+    if cfg.energy_accounting == "off":
+        aux["cells"] = int(d_in * d_out)
+        return y, aux
+
+    # --- accounting ----------------------------------------------------------
+    w_norm = jax.lax.stop_gradient(
+        jnp.sum(jnp.abs(wq.astype(jnp.float32))) / jnp.maximum(jnp.max(jnp.abs(wq)), 1e-8))
+    rho_sg = jax.lax.stop_gradient(rho)
+    aux["energy_pj"] = (
+        cfg.device.mac_energy(rho_sg, w_norm, x_level, reads_per_cell)
+        + cfg.device.peripheral_energy(
+            n_tokens * (d_in / cfg.crossbar_tile) * max(1.0, d_out / cfg.crossbar_tile)))
+    aux["energy_pj"] = jnp.float32(aux["energy_pj"])
+    # Technique B loss term (Eq. 13): alpha * rho * sum|w|, alpha = reads per token
+    # (normalized per-token so lambda has a model-size-independent meaning).
+    aux["reg"] = regularizer.layer_reg_term(wq, rho, alpha=1.0) / d_out
+    aux["reads"] = jnp.float32(n_tokens * d_in)
+    aux["cells"] = int(d_in * d_out)
+    aux["rho_sum"] = rho_sg
+    aux["rho_layers"] = 1
+    return y, aux

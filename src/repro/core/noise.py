@@ -1,0 +1,102 @@
+"""Technique A — device-enhanced fluctuation sampling.
+
+The paper augments the dataset with fluctuation samples ``S ~ R`` (Eqs. 7-12): every
+read of a stored weight returns ``r_l(w, rho)`` with a fresh RTN state ``l``.  During
+training the forward pass therefore sees ``w * (1 + a_l * sigma_rel(rho))``.
+
+Two sampling backends:
+
+* ``threefry`` — paper-faithful: ``jax.random.categorical`` from a split PRNG key.
+  This is what a PyTorch/GPU implementation does; it costs a full weight-shaped
+  random tensor in HBM per step.
+* ``hash``     — TPU-codesigned: counter-based hash of (seed, coords) from
+  :mod:`repro.core.hashrng`; bit-exact with the Pallas kernels, no HBM traffic when
+  fused on-chip.
+
+Granularity (`per_read` is the paper's exact model; the coarser modes are standard
+noise-injection QAT estimators with identical marginals — see DESIGN.md §3.1):
+
+* ``per_read``: independent sample per (batch_elem, k, n) read — O(B*K*N) samples;
+  affordable only for the paper-scale CNN experiments.
+* ``per_step``: independent sample per weight element per step, shared across the
+  batch — O(K*N); the default for LM-scale training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashrng
+from repro.core.device import DeviceModel
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseConfig:
+    backend: str = "hash"          # "hash" | "threefry"
+    granularity: str = "per_step"  # "per_step" | "per_read"
+    enabled: bool = True
+
+
+def sample_state_offsets_threefry(key, shape, device: DeviceModel):
+    """Paper-faithful categorical state sampling."""
+    logits = jnp.log(jnp.asarray(device.state_probs, jnp.float32))
+    state = jax.random.categorical(key, logits, shape=shape)
+    table = jnp.asarray(device.state_offsets, jnp.float32)
+    return table[state]
+
+
+def sample_state_offsets_hash(seed, shape, device: DeviceModel, plane=0,
+                              row0=0, col0=0):
+    """Counter-hash state sampling (TPU-codesigned path).
+
+    2D tail of `shape` is hashed over (row, col); leading dims are folded into the
+    plane counter so every batch slice gets independent draws.
+    """
+    if len(shape) == 1:
+        shape = (1,) + tuple(shape)
+        out = hashrng.tile_state_offsets(
+            seed, row0, col0, shape, device.state_offsets, device.state_probs, plane)
+        return out[0]
+    if len(shape) == 2:
+        return hashrng.tile_state_offsets(
+            seed, row0, col0, shape, device.state_offsets, device.state_probs, plane)
+    # fold leading dims into independent planes
+    lead = int(jnp.prod(jnp.asarray(shape[:-2])))
+    body = tuple(shape[-2:])
+    planes = [
+        hashrng.tile_state_offsets(seed, row0, col0, body, device.state_offsets,
+                                   device.state_probs, plane * 131071 + i + 1)
+        for i in range(lead)
+    ]
+    return jnp.stack(planes).reshape(shape)
+
+
+def fluctuate(w, rho, device: DeviceModel, cfg: NoiseConfig, *,
+              key: Optional[jax.Array] = None, seed=0, plane=0):
+    """Return the sampled read value  w~ = r_l(w, rho)  (technique A forward).
+
+    Gradients: flow through both `w` (straight-through on the multiplicative state,
+    which is treated as data) and `rho` (through sigma_rel — this is what lets the
+    optimizer trade accuracy for energy, Fig. 7).
+    """
+    if not cfg.enabled:
+        return w
+    if cfg.backend == "threefry":
+        if key is None:
+            raise ValueError("threefry backend needs a PRNG key")
+        offs = sample_state_offsets_threefry(key, w.shape, device)
+    elif cfg.backend == "hash":
+        offs = sample_state_offsets_hash(seed, w.shape, device, plane=plane)
+    else:
+        raise ValueError(f"unknown noise backend {cfg.backend!r}")
+    offs = jax.lax.stop_gradient(offs.astype(jnp.float32))
+    sig = device.sigma_rel(rho)
+    # multiply in the weight's own dtype: upcasting w to fp32 and back doubles
+    # the weight-stream traffic of every analog layer (§Perf cell-B it.3); the
+    # noise factor is computed in fp32 and rounded once (|1 - factor| ~ sigma,
+    # so a bf16 rounding of the factor is ~0.4% of the noise itself).
+    factor = (1.0 + offs * sig).astype(w.dtype)
+    return w * factor

@@ -1,0 +1,70 @@
+"""Symmetric fake-quantization with straight-through estimators.
+
+The paper fine-tunes with quantized weights *and* activations (§5).  Cells store a
+bounded conductance, so weights are quantized to ``w_bits`` symmetric integer levels;
+activations (the analog input lines / DAC levels) to ``a_bits`` levels.  Technique C
+additionally requires activations as explicit integer levels so they can be read out
+bit-serially (see :mod:`repro.core.decompose`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    w_bits: int = 8
+    a_bits: int = 8
+    enabled: bool = True
+    # per-channel scales for weights (last dim), per-tensor for activations
+    per_channel: bool = True
+
+
+def _ste(x, q):
+    """Straight-through: forward q, backward identity."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def symmetric_scale(x, bits, axis=None, eps=1e-8):
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, eps) / qmax
+
+
+def fake_quant(x, bits, axis=None):
+    """Quantize-dequantize with STE. Returns (x_q_dequant, scale)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jax.lax.stop_gradient(symmetric_scale(x, bits, axis=axis))
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return _ste(x, q * scale), scale
+
+
+def quant_levels(x, bits, axis=None):
+    """Integer levels + scale (no dequant); levels in [-qmax, qmax].
+
+    Forward: rounded integers. Backward: d(levels)/dx = 1/scale via STE, so training
+    through the bit-serial path still works.
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jax.lax.stop_gradient(symmetric_scale(x, bits, axis=axis))
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    q = _ste(x / scale, q)
+    return q, scale
+
+
+def quantize_weights(w, cfg: QuantConfig):
+    if not cfg.enabled:
+        return w, None
+    axis = tuple(range(w.ndim - 1)) if cfg.per_channel else None
+    wq, scale = fake_quant(w, cfg.w_bits, axis=axis)
+    return wq, scale
+
+
+def quantize_activations(x, cfg: QuantConfig):
+    if not cfg.enabled:
+        return x, None
+    xq, scale = fake_quant(x, cfg.a_bits, axis=None)
+    return xq, scale

@@ -1,0 +1,91 @@
+"""Deterministic synthetic data pipelines (no external datasets on this box).
+
+* ``SyntheticLM`` — learnable token streams: an affine Markov chain over the vocab
+  with injected noise, so cross-entropy demonstrably decreases during training.
+  Deterministic in (seed, step, host_shard) — resumable from any checkpointed step
+  and shardable across hosts (each host generates only its batch slice).
+* ``SyntheticImages`` — class-conditional structured images for the paper's CNN
+  experiments: per-class frequency patterns + Gaussian noise; linearly separable
+  enough that accuracy trends (paper Fig. 9/10 orderings) are measurable.
+* the *device-enhanced* part of the dataset (technique A) is the fluctuation
+  stream: fresh RTN states per step, keyed by the training step — realized inside
+  the model through Ctx.seed (see DESIGN.md §3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    batch_size: int                  # per-host batch
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+    input_kind: str = "tokens"       # tokens | embeds
+    d_model: int = 0                 # for embeds stubs
+    encdec: bool = False
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for a global step (resume-safe)."""
+        rng = np.random.default_rng(
+            (self.seed, step, self.host_id, 0xE17))
+        V = self.vocab_size
+        B, S = self.batch_size, self.seq_len
+        a = 31 % V or 1
+        b = rng.integers(0, V)
+        x0 = rng.integers(0, V, size=(B, 1))
+        toks = [x0]
+        for _ in range(S):
+            nxt = (toks[-1] * a + b) % V
+            flip = rng.random((B, 1)) < 0.1
+            nxt = np.where(flip, rng.integers(0, V, size=(B, 1)), nxt)
+            toks.append(nxt)
+        seq = np.concatenate(toks, axis=1).astype(np.int32)   # (B, S+1)
+        batch = {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+        if self.input_kind == "embeds":
+            emb = rng.standard_normal((B, S, self.d_model)).astype(np.float32)
+            batch["embeds"] = emb
+        if self.encdec:
+            batch["enc_embeds"] = rng.standard_normal(
+                (B, S, self.d_model)).astype(np.float32)
+        return batch
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class SyntheticImages:
+    num_classes: int = 4
+    image_size: int = 16
+    channels: int = 3
+    noise: float = 0.25
+    seed: int = 0
+
+    def _pattern(self, cls):
+        """Per-class deterministic frequency pattern."""
+        s = self.image_size
+        yy, xx = np.mgrid[0:s, 0:s] / s
+        freq = 1 + cls % 3
+        phase = cls * 0.7
+        base = np.sin(2 * np.pi * freq * xx + phase) * \
+            np.cos(2 * np.pi * (1 + cls // 3) * yy)
+        img = np.stack([base, base.T, base * base.T], -1)
+        return 0.5 + 0.4 * img
+
+    def batch(self, batch_size: int, step: int, split: str = "train") -> dict:
+        salt = 0 if split == "train" else 0x7E57
+        rng = np.random.default_rng((self.seed, step, salt))
+        labels = rng.integers(0, self.num_classes, size=batch_size)
+        imgs = np.stack([self._pattern(c) for c in labels]).astype(np.float32)
+        imgs += rng.standard_normal(imgs.shape).astype(np.float32) * self.noise
+        return {"images": np.clip(imgs, 0, 1),
+                "labels": labels.astype(np.int32)}

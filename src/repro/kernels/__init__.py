@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the EMT compute hot-spots.
+
+The paper's core computation — noisy analog crossbar MACs, plain (technique A) and
+bit-serial decomposed (technique C) — is the performance-critical inner loop of every
+EMT model. `emt_matmul.py` / `emt_bitserial.py` hold the `pl.pallas_call` kernels with
+explicit BlockSpec VMEM tiling, `ops.py` the jit'd wrappers, `ref.py` the pure-jnp
+oracles (bit-exact via the shared counter-hash RNG).
+"""
+from repro.kernels.emt_matmul import emt_matmul_pallas
+from repro.kernels.emt_bitserial import emt_bitserial_pallas
+from repro.kernels import ops, ref

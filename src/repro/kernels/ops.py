@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle: leading-dim flattening, padding to MXU-aligned tiles, block-size selection,
+and dispatch (TPU pallas / interpret-mode pallas / jnp reference).  All wrappers are
+shape-polymorphic at the Python level and jit-stable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device import DeviceModel
+from repro.kernels import ref as kref
+from repro.kernels.emt_matmul import emt_matmul_pallas
+from repro.kernels.emt_bitserial import emt_bitserial_pallas
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pick_blocks(m, k, n, *, vmem_budget=8 * 2 ** 20, dtype_bytes=4, bits=1):
+    """Choose (bm, bn, bk) multiples of 128 that keep the working set in VMEM.
+
+    Working set per grid step ≈ bm*bk (x) + bk*bn (w) + bm*bn (fp32 acc) + noise
+    regs. We prefer large bk (fewer revisits of the accumulator) then bm.
+    """
+    bm = min(512, max(128, 128 * (m // 128 or 1)))
+    bn = 128
+    bk = 128
+    def ws(bm, bn, bk):
+        return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+    while ws(bm, bn, bk * 2) <= vmem_budget and bk * 2 <= k and k % (bk * 2) == 0:
+        bk *= 2
+    while ws(bm, bn * 2, bk) <= vmem_budget and bn * 2 <= n and n % (bn * 2) == 0:
+        bn *= 2
+    while ws(bm, bn, bk) > vmem_budget and bm > 128:
+        bm //= 2
+    return int(min(bm, m)), int(bn), int(bk)
+
+
+@partial(jax.jit, static_argnames=("device", "seed_static", "plane", "interpret",
+                                   "use_ref"))
+def emt_matmul(x, w, rho, *, device: DeviceModel, seed_static: int = 0, plane=0,
+               interpret=False, use_ref=False):
+    """Noisy crossbar matmul: x (..., K) @ w (K, N) with in-kernel RTN noise."""
+    lead = x.shape[:-1]
+    kdim, n = w.shape
+    x2 = x.reshape(-1, kdim)
+    if use_ref:
+        y = kref.emt_matmul_ref(x2, w, rho, device=device, seed=seed_static,
+                                plane=plane)
+        return y.reshape(*lead, n)
+    m = x2.shape[0]
+    bm, bn, bk = pick_blocks(m, kdim, n)
+    xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    y = emt_matmul_pallas(xp, wp, rho, device=device, seed=seed_static, plane=plane,
+                          bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n].reshape(*lead, n)
+
+
+@partial(jax.jit, static_argnames=("device", "bits", "seed_static", "base_plane",
+                                   "interpret", "use_ref"))
+def _bitserial_jit(xq, w, rho, *, device: DeviceModel, bits: int,
+                   seed_static: int, base_plane: int, interpret: bool,
+                   use_ref: bool):
+    lead = xq.shape[:-1]
+    kdim, n = w.shape
+    x2 = xq.reshape(-1, kdim)
+    if use_ref:
+        y = kref.emt_bitserial_ref(x2, w, rho, device=device, bits=bits,
+                                   seed=seed_static, base_plane=base_plane)
+        return y.reshape(*lead, n)
+    m = x2.shape[0]
+    bm, bn, bk = pick_blocks(m, kdim, n, bits=bits)
+    xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    y = emt_bitserial_pallas(xp, wp, rho, device=device, bits=bits,
+                             seed=seed_static, base_plane=base_plane,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n].reshape(*lead, n)
+
+
+def emt_bitserial_matmul(xq, w, rho, *, device: DeviceModel, bits=7, seed=0,
+                         base_plane=0, interpret=False, use_ref=False):
+    """Bit-serial decomposed noisy matmul (technique C). xq: integer-valued levels."""
+    return _bitserial_jit(xq, w, rho, device=device, bits=bits,
+                          seed_static=int(seed) if not hasattr(seed, "dtype") else 0,
+                          base_plane=base_plane, interpret=interpret, use_ref=use_ref)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels — bit-exact by construction.
+
+The kernels sample RTN states from global element coordinates through
+:mod:`repro.core.hashrng`; these references do the same over the un-tiled arrays, so
+(kernel, reference) pairs agree to fp32 accumulation order.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashrng
+from repro.core.device import DeviceModel
+from repro.core.decompose import bit_plane
+
+
+def emt_matmul_ref(x, w, rho, *, device: DeviceModel, seed=0, plane=0):
+    """Oracle for kernels.emt_matmul.emt_matmul_pallas."""
+    kdim, n = w.shape
+    sig = device.sigma_rel(jnp.asarray(rho, jnp.float32))
+    offs = hashrng.tile_state_offsets(
+        seed, 0, 0, (kdim, n), device.state_offsets, device.state_probs, plane=plane)
+    wn = (w.astype(jnp.float32) * (1.0 + offs * sig)).astype(w.dtype)
+    return jnp.matmul(x, wn, preferred_element_type=jnp.float32).astype(jnp.float32)
+
+
+def emt_bitserial_ref(xq, w, rho, *, device: DeviceModel, bits=7, seed=0,
+                      base_plane=0):
+    """Oracle for kernels.emt_bitserial.emt_bitserial_pallas."""
+    kdim, n = w.shape
+    sig = device.sigma_rel(jnp.asarray(rho, jnp.float32))
+    sign = jnp.sign(xq.astype(jnp.float32))
+    mag = jnp.abs(xq.astype(jnp.float32))
+    acc = jnp.zeros((*xq.shape[:-1], n), jnp.float32)
+    for p in range(bits):
+        offs = hashrng.tile_state_offsets(
+            seed, 0, 0, (kdim, n), device.state_offsets, device.state_probs,
+            plane=base_plane + p)
+        wn = (w.astype(jnp.float32) * (1.0 + offs * sig)).astype(w.dtype)
+        planes = (sign * bit_plane(mag, p)).astype(w.dtype)
+        acc = acc + (2.0 ** p) * jnp.matmul(
+            planes, wn, preferred_element_type=jnp.float32).astype(jnp.float32)
+    return acc

@@ -1,0 +1,46 @@
+"""Mesh factories for the production topologies.
+
+Functions, not module-level constants — importing this module never touches jax
+device state (required for the dry-run's forced-512-device bootstrap).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips single pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — the dry-run "
+            "entrypoint must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import")
+    # more devices than needed (e.g. 512 forced, single-pod 256 mesh): use a prefix
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_mesh(data: int, model: int, pods: int = 1) -> Mesh:
+    """Elastic mesh: any (pods, data, model) factorization of the device count."""
+    if pods > 1:
+        shape, axes = (pods, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Single-process mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    dev = np.asarray(jax.devices()).reshape(1, n)
+    return Mesh(dev, ("data", "model"))

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's batches.
+
+Weak-type-correct, shardable, never allocates.  The modality frontends of
+[vlm]/[audio] archs are STUBS: `input_specs` provides precomputed patch/frame
+embeddings of shape (B, S, d_model) (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models import lm
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.input_kind == "embeds":
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encdec:
+        specs.setdefault("tokens", jax.ShapeDtypeStruct((B, S), jnp.int32))
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.input_kind == "embeds":
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encdec:
+        specs.setdefault("tokens", jax.ShapeDtypeStruct((B, S), jnp.int32))
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": lm.init_cache_specs(cfg, B, shape.seq_len),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,4 @@
+from repro.models.config import (ModelConfig, ShapeConfig, SHAPES, TRAIN_4K,
+                                 PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.models.context import Ctx
+from repro.models import lm

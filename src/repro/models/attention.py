@@ -1,0 +1,208 @@
+"""Grouped-query attention with RoPE/M-RoPE, soft-capping, sliding windows,
+KV caches, and cross-attention — every projection an EMT crossbar matmul."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.emt_linear import emt_dense, dense_specs, new_aux, add_aux
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": dense_specs(D, H * hd, cfg.emt, axes=("embed", "heads"), dtype=cfg.dtype),
+        "wk": dense_specs(D, KV * hd, cfg.emt, axes=("embed", "heads"), dtype=cfg.dtype),
+        "wv": dense_specs(D, KV * hd, cfg.emt, axes=("embed", "heads"), dtype=cfg.dtype),
+        "wo": dense_specs(H * hd, D, cfg.emt, axes=("heads", "embed"), dtype=cfg.dtype),
+    }
+    if cfg.qk_norm:
+        specs["qnorm"] = common.rmsnorm_specs(hd)
+        specs["knorm"] = common.rmsnorm_specs(hd)
+    return specs
+
+
+def _project_qkv(params, xq, xkv, cfg: ModelConfig, ctx: Ctx, tag: str):
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    aux = new_aux()
+    q, a = emt_dense(params["wq"], xq, cfg.emt, tag=f"{tag}/wq", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    k, a = emt_dense(params["wk"], xkv, cfg.emt, tag=f"{tag}/wk", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    v, a = emt_dense(params["wv"], xkv, cfg.emt, tag=f"{tag}/wv", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    q = q.reshape(*xq.shape[:-1], H, hd)
+    k = k.reshape(*xkv.shape[:-1], KV, hd)
+    v = v.reshape(*xkv.shape[:-1], KV, hd)
+    if cfg.qk_norm:
+        q = common.rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = common.rmsnorm(params["knorm"], k, cfg.norm_eps)
+    return q, k, v, aux
+
+
+def _gqa_core(q, k, v, mask, cfg: ModelConfig, ctx: Ctx):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask (B,1,Sq,Sk) additive fp32.
+
+    Long sequences (Sq>1 and Sk>attn_chunk) run the chunked online-softmax
+    ("flash-style") path: KV is consumed in fixed chunks with running
+    (max, sum, acc) statistics — scores for a 32k x 32k prefill never
+    materialize (34 GB/chip -> ~chunk-sized transients).  Python-unrolled:
+    dry-run graphs stay loop-free.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    q = ctx.shard(q, ("batch", "seq", "heads", None))
+    # K/V stay in cache dtype (bf16): upcasting a 32k cache to fp32 per layer
+    # doubles+ decode HBM traffic (§Perf cell-C it.2). The score einsum
+    # accumulates in fp32 via preferred_element_type (MXU-native).
+    qg = q.reshape(B, Sq, KV, G, hd)
+    chunk = cfg.attn_chunk
+
+    def scores_of(kc):
+        return jnp.einsum("bqkgh,bskh->bkgqs", qg, kc,
+                          preferred_element_type=jnp.float32) / np.sqrt(hd)
+
+    if Sq == 1 or not chunk or Sk <= chunk:
+        scores = scores_of(k)
+        scores = common.softcap(scores, cfg.attn_softcap)
+        if mask is not None:   # None => attend everywhere (cross-attn at decode)
+            scores = scores + mask.reshape(B, 1, 1, Sq, -1)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, Sq, H * hd).astype(v.dtype)
+
+    # chunked online softmax over Sk
+    m = jnp.full((B, KV, G, Sq), -1e30, jnp.float32)
+    l = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    acc = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    for c0 in range(0, Sk, chunk):
+        kc = k[:, c0:c0 + chunk]
+        vc = v[:, c0:c0 + chunk]
+        s = scores_of(kc)
+        s = common.softcap(s, cfg.attn_softcap)
+        if mask is not None:
+            s = s + mask[:, :, :, c0:c0 + chunk].reshape(B, 1, 1, Sq, -1)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(s > common.NEG_INF / 2,
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, KV, G, Sq, hd)
+    out = out.transpose(0, 3, 1, 2, 4)                # -> (B, Sq, KV, G, hd)
+    return out.reshape(B, Sq, H * hd).astype(v.dtype)
+
+
+def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
+                   tag: str, cache: Optional[dict] = None, cache_index=None,
+                   positions3=None):
+    """Self-attention. Train/prefill: full-sequence. Decode: one step vs cache.
+
+    Returns (y, aux, new_cache_entries_or_None).
+    """
+    q, k, v, aux = _project_qkv(params, x, x, cfg, ctx, tag)
+
+    if cfg.rope_type == "mrope":
+        p3 = positions3 if positions3 is not None else jnp.broadcast_to(
+            positions[None], (3, *positions.shape))
+        q = common.apply_mrope(q, p3, cfg.mrope_sections, cfg.rope_theta)
+        k = common.apply_mrope(k, p3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        win = cfg.sliding_window
+        ring = bool(win) and cache["k"].shape[1] == win
+        B = x.shape[0]
+        if cache_index is None:
+            # ---- prefill: fill the cache, attend within the prompt ----------
+            S = k.shape[1]
+            if ring and S >= win:
+                # ring buffer keeps the last `win` prompt tokens at slots
+                # (pos mod win) — i.e. the tail, cyclically shifted
+                shift = (S - win) % win
+                k_cache = jnp.roll(k[:, S - win:], shift, axis=1)
+                v_cache = jnp.roll(v[:, S - win:], shift, axis=1)
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": k_cache.astype(cache["k"].dtype),
+                         "v": v_cache.astype(cache["v"].dtype)}
+            # fall through: attend with the prompt-length k, v + caller's mask
+        elif ring:
+            # ---- decode, sliding-window layer: ring write + ring attend -----
+            # A 32k-cache local layer reads `win` keys, not 32768, and its
+            # cache is win-sized. (A windowed dynamic_slice of a seq-sharded
+            # full cache was measured strictly WORSE — SPMD all-gathers the
+            # cache; see EXPERIMENTS.md §Perf "windowed decode".)
+            slot = jnp.mod(jnp.asarray(cache_index), win)
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            # slot s holds position p(s) = index - ((index - s) mod win)
+            idx = jnp.asarray(cache_index)
+            k_pos = idx - jnp.mod(idx - jnp.arange(win), win)
+            mask = jnp.broadcast_to(
+                jnp.where(k_pos >= 0, 0.0, common.NEG_INF)[None, None, None, :],
+                (B, 1, 1, win))
+            new_cache = {"k": k_cache, "v": v_cache}
+            k, v = k_cache, v_cache
+        else:
+            # ---- decode, global layer: write at cache_index, attend all -----
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            k, v = k_cache, v_cache
+
+    y = _gqa_core(q, k, v, mask, cfg, ctx)
+    o, a = emt_dense(params["wo"], y, cfg.emt, tag=f"{tag}/wo", seed=ctx.seed,
+                     key=ctx.key)
+    aux = add_aux(aux, a)
+    return o, aux, new_cache
+
+
+def cross_attention(params, x, cfg: ModelConfig, *, enc_out=None, enc_mask=None,
+                    ctx: Ctx, tag: str, cache: Optional[dict] = None):
+    """Encoder-decoder cross attention. K/V from `enc_out` (prefill) or `cache`."""
+    aux = new_aux()
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, a = emt_dense(params["wq"], x, cfg.emt, tag=f"{tag}/wq", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    q = q.reshape(*x.shape[:-1], H, hd)
+    if enc_out is None and cache is not None and "ck" in cache:
+        k, v = cache["ck"], cache["cv"]
+        new_cache = None
+    else:
+        k, a = emt_dense(params["wk"], enc_out, cfg.emt, tag=f"{tag}/wk",
+                         seed=ctx.seed, key=ctx.key)
+        aux = add_aux(aux, a)
+        v, a = emt_dense(params["wv"], enc_out, cfg.emt, tag=f"{tag}/wv",
+                         seed=ctx.seed, key=ctx.key)
+        aux = add_aux(aux, a)
+        k = k.reshape(*enc_out.shape[:-1], KV, hd)
+        v = v.reshape(*enc_out.shape[:-1], KV, hd)
+        new_cache = {"ck": k, "cv": v}
+    y = _gqa_core(q, k, v, enc_mask, cfg, ctx)
+    o, a = emt_dense(params["wo"], y, cfg.emt, tag=f"{tag}/wo", seed=ctx.seed,
+                     key=ctx.key)
+    aux = add_aux(aux, a)
+    return o, aux, new_cache

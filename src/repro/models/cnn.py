@@ -1,0 +1,133 @@
+"""Paper's own model family — small VGG/ResNet-style CNNs on EMT crossbars.
+
+Convolutions run as im2col + ``emt_dense``: each patch is the analog input-line
+vector, the (k*k*Cin, Cout) kernel matrix is the crossbar — the exact mapping
+described in the paper's Fig. 1(c).  Depthwise convs are intentionally *not*
+special-cased (the paper's MobileNet analysis §5.1: tiny fan-in wastes peripheral
+energy — our energy model reproduces that through the per-row-read term).
+
+Normalization is LayerNorm (stateless) instead of BatchNorm — documented deviation
+(DESIGN.md §8); the technique ordering claims do not depend on the norm flavor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.emt_linear import EMTConfig, emt_dense, dense_specs, new_aux, add_aux
+from repro.nn.param import ParamSpec, ones_init, constant_init
+from repro.models.context import Ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "vgg_s"
+    arch: str = "vgg"                # vgg | resnet
+    channels: Tuple[int, ...] = (32, 64, 128)
+    blocks_per_stage: int = 1
+    num_classes: int = 10
+    image_size: int = 32
+    in_channels: int = 3
+    emt: EMTConfig = EMTConfig()
+    dtype: type = jnp.float32
+
+
+def _patches(x, k, stride=1):
+    """x (B,H,W,C) -> (B, H', W', k*k*C) via extract-patches (im2col)."""
+    B, H, W, C = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    out = jax.lax.conv_general_dilated_patches(
+        xp.transpose(0, 3, 1, 2), (k, k), (stride, stride), "VALID")
+    # (B, C*k*k, H', W') -> (B, H', W', C*k*k)
+    return out.transpose(0, 2, 3, 1)
+
+
+def conv_specs(cin, cout, emt: EMTConfig, k=3, dtype=jnp.float32):
+    return dense_specs(k * k * cin, cout, emt, axes=(None, None), dtype=dtype,
+                       bias=True)
+
+
+def emt_conv(params, x, emt: EMTConfig, *, k=3, stride=1, tag, ctx: Ctx):
+    p = _patches(x, k, stride)
+    y, aux = emt_dense(params, p, emt, tag=tag, seed=ctx.seed, key=ctx.key)
+    return y, aux
+
+
+def layernorm_specs(c):
+    return {"scale": ParamSpec((c,), jnp.float32, (), ones_init),
+            "bias": ParamSpec((c,), jnp.float32, (), constant_init(0.0))}
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"]
+            + params["bias"]).astype(x.dtype)
+
+
+def specs(cfg: CNNConfig) -> dict:
+    s = {}
+    cin = cfg.in_channels
+    for si, c in enumerate(cfg.channels):
+        for bi in range(cfg.blocks_per_stage):
+            name = f"s{si}b{bi}"
+            s[name] = {"conv1": conv_specs(cin if bi == 0 else c, c, cfg.emt),
+                       "ln1": layernorm_specs(c),
+                       "conv2": conv_specs(c, c, cfg.emt),
+                       "ln2": layernorm_specs(c)}
+            if cfg.arch == "resnet" and bi == 0 and cin != c:
+                s[name]["proj"] = conv_specs(cin, c, cfg.emt, k=1)
+            cin = c
+    s["head"] = dense_specs(cfg.channels[-1], cfg.num_classes, cfg.emt,
+                            bias=True)
+    return s
+
+
+def forward(params, x, cfg: CNNConfig, ctx: Ctx):
+    """x: (B, H, W, C) in [0,1]. Returns (logits, aux)."""
+    aux = new_aux()
+    h = x.astype(cfg.dtype)
+    for si, c in enumerate(cfg.channels):
+        for bi in range(cfg.blocks_per_stage):
+            name = f"s{si}b{bi}"
+            p = params[name]
+            y, a = emt_conv(p["conv1"], h, cfg.emt, tag=f"{name}/c1", ctx=ctx)
+            aux = add_aux(aux, a)
+            y = jax.nn.relu(layernorm(p["ln1"], y))
+            y2, a = emt_conv(p["conv2"], y, cfg.emt, tag=f"{name}/c2", ctx=ctx)
+            aux = add_aux(aux, a)
+            y2 = layernorm(p["ln2"], y2)
+            if cfg.arch == "resnet":
+                skip = h
+                if "proj" in p:
+                    skip, a = emt_conv(p["proj"], h, cfg.emt, k=1,
+                                       tag=f"{name}/proj", ctx=ctx)
+                    aux = add_aux(aux, a)
+                if skip.shape == y2.shape:
+                    y2 = y2 + skip
+            h = jax.nn.relu(y2)
+        # 2x2 mean-pool between stages
+        B, H, W, C = h.shape
+        h = h.reshape(B, H // 2, 2, W // 2, 2, C).mean((2, 4))
+    h = h.mean((1, 2))                                   # global average pool
+    logits, a = emt_dense(params["head"], h, cfg.emt, tag="head", seed=ctx.seed,
+                          key=ctx.key)
+    aux = add_aux(aux, a)
+    return logits.astype(jnp.float32), aux
+
+
+def loss_fn(params, batch, cfg: CNNConfig, ctx: Ctx, lam: float = 0.0):
+    logits, aux = forward(params, batch["images"], cfg, ctx)
+    logp = jax.nn.log_softmax(logits, -1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, batch["labels"][:, None], -1))
+    loss = ce + lam * aux["reg"]
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return loss, {"loss": loss, "ce": ce, "acc": acc,
+                  "energy_uj": aux["energy_pj"] * 1e-6, "reg": aux["reg"],
+                  "rho_mean": aux["rho_sum"] / max(1, aux["rho_layers"])}

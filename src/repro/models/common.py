@@ -1,0 +1,130 @@
+"""Shared model components: norms, rotary embeddings, masks, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.param import ParamSpec, ones_init, normal_init
+from repro.core.emt_linear import EMTConfig, emt_dense, dense_specs, new_aux
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_specs(d, dtype=jnp.float32):
+    return {"scale": ParamSpec((d,), jnp.float32, ("embed",), ones_init)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def activation(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu, "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            }[name]
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (default + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+def _rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, S, H, hd); positions: (B, S) int -> same shape, rotated."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(_rope_freqs(hd, theta), jnp.float32)       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=10000.0):
+    """Multimodal RoPE (qwen2-vl): positions3 (3, B, S) for (t, h, w).
+
+    The hd/2 frequency lanes are split into `sections` groups, each rotated by its
+    own position stream. For text, all three streams are equal → reduces to RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(_rope_freqs(hd, theta), jnp.float32)        # (hd/2,)
+    sec = np.asarray(sections)
+    assert sec.sum() == hd // 2, (sections, hd)
+    sec_id = np.repeat(np.arange(len(sections)), sec)               # (hd/2,)
+    pos = positions3[sec_id]                                        # (hd/2, B, S) gathered per lane
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs      # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention masks (built from position arithmetic; fp additive)
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def causal_mask(q_pos, k_pos, window: int = 0):
+    """q_pos (B, Sq), k_pos (B, Sk) -> (B, 1, Sq, Sk) additive mask."""
+    q = q_pos[:, None, :, None]
+    k = k_pos[:, None, None, :]
+    ok = k <= q
+    if window and window > 0:
+        ok = ok & (q - k < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def full_mask(q_valid, k_valid):
+    """Bidirectional (encoder) mask from validity flags (B, S)."""
+    ok = q_valid[:, None, :, None] & k_valid[:, None, None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def embedding_specs(vocab, d, dtype):
+    return {"table": ParamSpec((vocab, d), dtype, ("vocab", "embed"),
+                               normal_init(0.02))}
+
+
+def embed(params, tokens, scale: bool, d: int):
+    y = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        y = y * np.sqrt(d)
+    return y
+
+
+def unembed_specs(d, vocab, emt: EMTConfig, dtype):
+    return dense_specs(d, vocab, emt, axes=("embed", "vocab"), dtype=dtype,
+                       init=normal_init(0.02))
+
+
+def unembed(params, x, emt: EMTConfig, *, tied_table=None, seed=0, key=None):
+    """Project to vocabulary logits. With tied embeddings the table is reused —
+    still routed through emt_dense semantics by constructing a transposed view."""
+    if tied_table is not None:
+        p = dict(params)
+        p["w"] = tied_table.T
+        y, aux = emt_dense(p, x, emt, tag="unembed", seed=seed, key=key)
+        return y, aux
+    return emt_dense(params, x, emt, tag="unembed", seed=seed, key=key)

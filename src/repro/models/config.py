@@ -1,0 +1,116 @@
+"""Unified model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.emt_linear import EMTConfig, IDEAL
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+
+    # --- attention ---------------------------------------------------------
+    rope_theta: float = 10000.0
+    rope_type: str = "default"       # default | mrope
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)   # qwen2-vl (t, h, w) — of head_dim/2
+    attn_softcap: float = 0.0        # gemma2 attention logit soft-cap
+    final_softcap: float = 0.0       # gemma2 final logit soft-cap
+    sliding_window: int = 0          # >0: width of local attention layers
+    # per-layer block pattern, tiled/truncated to num_layers.
+    # entries: "attn" | "local" | "global" | "mamba" | "mlstm" | "slstm"
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    qk_norm: bool = False
+    attn_chunk: int = 4096           # KV chunk for online-softmax long-seq path
+
+    # --- moe ---------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_every: int = 1               # apply MoE every k-th layer (others dense MLP)
+    router_aux_weight: float = 0.01
+
+    # --- ssm (mamba) ---------------------------------------------------------
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0             # 0 -> ceil(d_model/16)
+
+    # --- xlstm ----------------------------------------------------------------
+    slstm_recurrent: bool = False    # True: exact R-matrix recurrence via lax.scan
+
+    # --- encoder-decoder -----------------------------------------------------
+    encoder_layers: int = 0          # >0 => enc-dec (seamless)
+
+    # --- io -------------------------------------------------------------------
+    input_kind: str = "tokens"       # tokens | embeds (vlm/audio frontend stubs)
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma multiplies embeddings by sqrt(d)
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    dtype: Any = jnp.bfloat16
+
+    # --- EMT (the paper's technique) -----------------------------------------
+    emt: EMTConfig = IDEAL
+
+    # --- runtime --------------------------------------------------------------
+    remat: bool = True               # jax.checkpoint around each block
+    logit_dtype: Any = jnp.float32
+
+    # -------------------------------------------------------------------------
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def blocks(self) -> Tuple[str, ...]:
+        """Resolve layer_pattern into a per-layer block-kind tuple."""
+        pat = self.layer_pattern
+        reps = -(-self.num_layers // len(pat))
+        out = (pat * reps)[: self.num_layers]
+        return tuple(out)
+
+    def moe_layer_mask(self) -> Tuple[bool, ...]:
+        """Which layers carry MoE FFN (True) vs dense FFN."""
+        if self.num_experts == 0:
+            return tuple(False for _ in range(self.num_layers))
+        return tuple((i % self.moe_every) == (self.moe_every - 1)
+                     for i in range(self.num_layers))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+SHAPES = {s.name: s for s in [TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K]}

@@ -1,0 +1,27 @@
+"""Per-call context threaded through model applies (noise seeds, sharding hooks)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+
+def _no_shard(x, names):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Threading context for EMT noise + activation sharding.
+
+    seed:  uint32 scalar (traced ok) — fresh per training step so technique A sees
+           new fluctuation data each batch.
+    key:   PRNG key for the threefry noise backend (None with hash backend).
+    shard: activation-sharding hook `f(x, logical_names) -> x`, installed by the
+           distributed runner (identity on a single host).
+    """
+    seed: Any = 0
+    key: Optional[Any] = None
+    shard: Callable = _no_shard
+
+    def with_seed(self, seed, key=None):
+        return dataclasses.replace(self, seed=seed, key=key)

@@ -1,0 +1,241 @@
+"""Top-level language models: decoder-only LM and encoder-decoder.
+
+Public API (all functional):
+
+    specs(cfg)                                  -> ParamSpec tree
+    train_loss(params, batch, cfg, ctx)          -> (loss, metrics)
+    prefill(params, batch, cfg, ctx, max_len)    -> (cache, last_logits, aux)
+    decode_step(params, cache, tokens, cfg, ctx) -> (logits, new_cache, aux)
+    init_cache_specs(cfg, batch, max_len)        -> abstract cache tree
+
+`batch` dict: "tokens" (B,S) int32 or "embeds" (B,S,D) for vlm/audio stubs, plus
+"labels" (B,S) for training; enc-dec adds "enc_embeds"/"enc_tokens".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.emt_linear import new_aux, add_aux
+from repro.core import regularizer
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.models import stack as stk
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+def specs(cfg: ModelConfig) -> dict:
+    kinds = cfg.blocks()
+    moe_mask = cfg.moe_layer_mask()
+    s = {
+        "embed": common.embedding_specs(cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "decoder": stk.stack_specs(cfg, cfg.num_layers, kinds, moe_mask,
+                                   cross=cfg.is_encdec),
+        "final_norm": common.rmsnorm_specs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = common.unembed_specs(cfg.d_model, cfg.vocab_size,
+                                            cfg.emt, cfg.dtype)
+    elif cfg.emt.active:
+        # tied table reused as the crossbar — still needs its energy coefficient
+        from repro.nn.param import ParamSpec, constant_init
+        s["lm_head"] = {"rho_raw": ParamSpec(
+            (), jnp.float32, (),
+            constant_init(regularizer.rho_init_raw(cfg.emt.rho_init)))}
+    if cfg.is_encdec:
+        enc_kinds = tuple("attn" for _ in range(cfg.encoder_layers))
+        enc_moe = tuple(False for _ in range(cfg.encoder_layers))
+        s["encoder"] = stk.stack_specs(cfg, cfg.encoder_layers, enc_kinds, enc_moe)
+        s["enc_norm"] = common.rmsnorm_specs(cfg.d_model)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# input embedding
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch, cfg: ModelConfig, ctx: Ctx):
+    if cfg.input_kind == "embeds" and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = common.embed(params["embed"], batch["tokens"], cfg.embed_scale,
+                         cfg.d_model)
+    return ctx.shard(x, ("batch", "seq", "embed"))
+
+
+def _encode(params, batch, cfg: ModelConfig, ctx: Ctx):
+    """Bidirectional encoder (seamless audio stub: precomputed frame embeds)."""
+    enc_x = batch.get("enc_embeds")
+    if enc_x is None:
+        enc_x = common.embed(params["embed"], batch["enc_tokens"],
+                             cfg.embed_scale, cfg.d_model)
+    enc_x = enc_x.astype(cfg.dtype)
+    B, S = enc_x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    valid = jnp.ones((B, S), bool)
+    mask = common.full_mask(valid, valid)
+    kinds = tuple("attn" for _ in range(cfg.encoder_layers))
+    moe = tuple(False for _ in range(cfg.encoder_layers))
+    y, aux, _ = stk.apply_stack(params["encoder"], enc_x, cfg, kinds, moe,
+                                ctx=ctx, tag="enc", positions=pos, mask=mask,
+                                remat=cfg.remat)
+    return common.rmsnorm(params["enc_norm"], y, cfg.norm_eps), pos, aux
+
+
+def _logits(params, h, cfg: ModelConfig, ctx: Ctx):
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    p = params.get("lm_head", {})
+    y, aux = common.unembed(p, h, cfg.emt, tied_table=tied, seed=ctx.seed,
+                            key=ctx.key)
+    y = common.softcap(y.astype(cfg.logit_dtype), cfg.final_softcap)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# training forward + loss
+# ---------------------------------------------------------------------------
+def train_loss(params, batch, cfg: ModelConfig, ctx: Ctx, lam: float = 0.0):
+    x = _embed_inputs(params, batch, cfg, ctx)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    masks = {"global": common.causal_mask(pos, pos),
+             "local": common.causal_mask(pos, pos, cfg.sliding_window)}
+
+    enc_out = enc_mask = None
+    aux = new_aux()
+    if cfg.is_encdec:
+        enc_out, enc_pos, a = _encode(params, batch, cfg, ctx)
+        aux = add_aux(aux, a)
+        valid = jnp.ones(enc_pos.shape, bool)
+        enc_mask = common.full_mask(jnp.ones((B, S), bool), valid)
+
+    h, a, _ = stk.apply_stack(
+        params["decoder"], x, cfg, cfg.blocks(), cfg.moe_layer_mask(), ctx=ctx,
+        tag="dec", positions=pos, mask=masks, enc_out=enc_out, enc_mask=enc_mask,
+        remat=cfg.remat)
+    aux = add_aux(aux, a)
+    h = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits, a = _logits(params, h, cfg, ctx)
+    aux = add_aux(aux, a)
+
+    labels = batch["labels"]
+    # Sharded-vocab-safe CE: take_along_axis over a model-sharded vocab dim
+    # makes SPMD all-gather the full (B,S,V) fp32 logits (measured: +192 GB/chip
+    # temps, +198 GB/chip all-reduce on gemma3-1b train_4k — EXPERIMENTS.md
+    # §Perf it.1). The masked-sum form keeps every reduction local + a small
+    # (B,S) all-reduce, and never materializes log_softmax.
+    logits_f = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits_f, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits_f.shape,
+                                          logits_f.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits_f, 0.0),
+                     axis=-1)
+    ce = jnp.mean(lse - picked)
+    loss = ce + lam * aux["reg"] + aux["aux_loss"]
+    metrics = {
+        "loss": loss, "ce": ce,
+        "energy_uj": aux["energy_pj"] * 1e-6,
+        "reg": aux["reg"], "aux_loss": aux["aux_loss"],
+        "rho_mean": aux["rho_sum"] / max(1, aux["rho_layers"]),
+    }
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    kinds = cfg.blocks()
+    cache = {}
+    for i, kind in enumerate(kinds):
+        cache[f"layer_{i:03d}"] = stk.block_state_specs(
+            cfg, kind, batch, max_len,
+            cross_len=max_len if cfg.is_encdec else 0)
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_specs(cfg, batch, max_len))
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: Ctx, cache):
+    """Run the prompt through the model, filling `cache`.
+
+    Returns (new_cache, last_token_logits, aux).
+    """
+    x = _embed_inputs(params, batch, cfg, ctx)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    # prefill attends within the prompt (the not-yet-filled cache tail would be
+    # masked anyway — attending over S instead of max_len is strictly cheaper)
+    masks = {"global": common.causal_mask(pos, pos),
+             "local": common.causal_mask(pos, pos, cfg.sliding_window)}
+
+    enc_out = enc_mask = None
+    aux = new_aux()
+    if cfg.is_encdec:
+        enc_out, enc_pos, a = _encode(params, batch, cfg, ctx)
+        aux = add_aux(aux, a)
+        enc_mask = common.full_mask(jnp.ones((B, S), bool),
+                                    jnp.ones(enc_pos.shape, bool))
+
+    h, a, new_caches = stk.apply_stack(
+        params["decoder"], x, cfg, cfg.blocks(), cfg.moe_layer_mask(), ctx=ctx,
+        tag="dec", positions=pos, mask=masks, caches=cache, cache_index=None,
+        enc_out=enc_out, enc_mask=enc_mask, remat=False)
+    aux = add_aux(aux, a)
+    h = common.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits, a = _logits(params, h, cfg, ctx)
+    aux = add_aux(aux, a)
+    merged = {k: {**cache[k], **v} for k, v in new_caches.items()} if new_caches \
+        else cache
+    for k in cache:
+        merged.setdefault(k, cache[k])
+    return merged, logits[:, 0], aux
+
+
+def _cache_len(cache):
+    # max across layers: sliding-window layers hold ring buffers shorter than
+    # the global context
+    lens = [blk["k"].shape[1] for blk in cache.values() if "k" in blk]
+    return max(lens) if lens else 0
+
+
+def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx):
+    """One decode step: `tokens` (B,) generated at position `index` (scalar).
+
+    Returns (logits (B, vocab), new_cache, aux).
+    """
+    B = tokens.shape[0]
+    if cfg.input_kind == "embeds":
+        # modality stubs still decode text tokens
+        x = common.embed(params["embed"], tokens[:, None], cfg.embed_scale,
+                         cfg.d_model)
+    else:
+        x = common.embed(params["embed"], tokens[:, None], cfg.embed_scale,
+                         cfg.d_model)
+    x = x.astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.asarray(index)[None, None], (B, 1))
+    max_len = _cache_len(cache) or 1
+    k_pos = jnp.broadcast_to(jnp.arange(max_len)[None], (B, max_len))
+    masks = {"global": common.causal_mask(pos, k_pos),
+             "local": common.causal_mask(pos, k_pos, cfg.sliding_window)}
+
+    h, aux, new_caches = stk.apply_stack(
+        params["decoder"], x, cfg, cfg.blocks(), cfg.moe_layer_mask(), ctx=ctx,
+        tag="dec", positions=pos, mask=masks, caches=cache, cache_index=index,
+        remat=False)
+    h = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits, a = _logits(params, h, cfg, ctx)
+    aux = add_aux(aux, a)
+    merged = {}
+    for k in cache:
+        upd = new_caches.get(k)
+        merged[k] = {**cache[k], **upd} if upd else cache[k]
+    return logits[:, 0], merged, aux

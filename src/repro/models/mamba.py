@@ -1,0 +1,144 @@
+"""Mamba selective-SSM block (jamba's sequence mixer), TPU-native.
+
+The selective scan is a linear recurrence  h_t = dA_t * h_{t-1} + dBx_t  computed
+with `jax.lax.associative_scan` (log-depth, no `while` loops — keeps dry-run graphs
+exactly measurable, and is the S5-style TPU-idiomatic formulation).  Long sequences
+are processed in fixed chunks (python-unrolled) so the (B, S, d_inner, N) state
+tensor stays bounded.
+
+EMT: in/x/dt/out projections are crossbar matmuls; the depthwise conv and the
+recurrence itself are not stored-weight MACs (see DESIGN.md §Arch-applicability)
+and run ideal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.emt_linear import emt_dense, dense_specs, new_aux, add_aux
+from repro.nn.param import ParamSpec, constant_init, normal_init
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+
+SCAN_CHUNK = 4096
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    D, DI, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+
+    def a_init(key, shape, dtype):
+        # S4D-real init: A = -(1..N) per channel
+        a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (DI, 1))
+        return jnp.log(a).astype(dtype)
+
+    return {
+        "in_proj": dense_specs(D, 2 * DI, cfg.emt, axes=("embed", "mlp"),
+                               dtype=cfg.dtype),
+        "conv_w": ParamSpec((cfg.ssm_conv, DI), cfg.dtype, (None, "mlp"),
+                            normal_init(0.1)),
+        "conv_b": ParamSpec((DI,), cfg.dtype, ("mlp",), constant_init(0.0)),
+        "x_proj": dense_specs(DI, R + 2 * N, cfg.emt, axes=("mlp", None),
+                              dtype=cfg.dtype),
+        "dt_proj": dense_specs(R, DI, cfg.emt, axes=(None, "mlp"),
+                               dtype=cfg.dtype, bias=True),
+        "A_log": ParamSpec((DI, N), jnp.float32, ("mlp", None), a_init),
+        "D_skip": ParamSpec((DI,), jnp.float32, ("mlp",), constant_init(1.0)),
+        "out_proj": dense_specs(DI, D, cfg.emt, axes=("mlp", "embed"),
+                                dtype=cfg.dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, state=None):
+    """x (B, S, DI), w (K, DI). state: (B, K-1, DI) carried context (decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return y + b, new_state
+
+
+def _ssm_combine(left, right):
+    al, bl = left
+    ar, br = right
+    return al * ar, ar * bl + br
+
+
+def _selective_scan(dA, dBx, h0=None, chunk=SCAN_CHUNK):
+    """h_t = dA_t * h_{t-1} + dBx_t over axis=1. Returns (h_all, h_last)."""
+    B, S = dA.shape[:2]
+    chunk = min(chunk, S)
+    outs = []
+    h_prev = h0
+    for s0 in range(0, S, chunk):
+        a = dA[:, s0:s0 + chunk]
+        b = dBx[:, s0:s0 + chunk]
+        a_cum, local = jax.lax.associative_scan(_ssm_combine, (a, b), axis=1)
+        h = local if h_prev is None else a_cum * h_prev[:, None] + local
+        outs.append(h)
+        h_prev = h[:, -1]
+    return jnp.concatenate(outs, axis=1), h_prev
+
+
+def mamba(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
+    """Full-sequence mixing. state (decode): {"h": (B,DI,N), "conv": (B,K-1,DI)}.
+
+    Returns (y, aux, new_state). For S==1 with a state, performs one recurrent step.
+    """
+    B, S, D = x.shape
+    DI, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    aux = new_aux()
+
+    xz, a = emt_dense(params["in_proj"], x, cfg.emt, tag=f"{tag}/in",
+                      seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = ctx.shard(x_in, ("batch", "seq", "mlp"))
+
+    conv_state = None if state is None else state["conv"]
+    x_c, new_conv = _causal_depthwise_conv(x_in, params["conv_w"],
+                                           params["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    xdb, a = emt_dense(params["x_proj"], x_c, cfg.emt, tag=f"{tag}/xp",
+                       seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    dt_r, Bm, Cm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt, a = emt_dense(params["dt_proj"], dt_r, cfg.emt, tag=f"{tag}/dt",
+                      seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))                     # (B,S,DI)
+
+    A = -jnp.exp(params["A_log"])                                    # (DI,N)
+    dA = jnp.exp(dt[..., None] * A)                                  # (B,S,DI,N)
+    dBx = (dt * x_c.astype(jnp.float32))[..., None] * \
+        Bm.astype(jnp.float32)[:, :, None, :]                        # (B,S,DI,N)
+
+    h0 = None if state is None else state["h"]
+    if S == 1 and h0 is not None:
+        h_last = dA[:, 0] * h0 + dBx[:, 0]
+        h_all = h_last[:, None]
+    else:
+        h_all, h_last = _selective_scan(dA, dBx, h0)
+
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm.astype(jnp.float32))
+    y = y + params["D_skip"] * x_c.astype(jnp.float32)
+    y = (y.astype(cfg.dtype)) * jax.nn.silu(z)
+    out, a = emt_dense(params["out_proj"], y, cfg.emt, tag=f"{tag}/out",
+                       seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    new_state = {"h": h_last, "conv": new_conv}
+    return out, aux, new_state
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int):
+    """Abstract decode-state shapes for cache allocation."""
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                     cfg.dtype),
+    }

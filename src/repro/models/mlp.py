@@ -1,0 +1,31 @@
+"""Gated (GLU) feed-forward block on EMT crossbars."""
+from __future__ import annotations
+
+from repro.core.emt_linear import emt_dense, dense_specs, new_aux, add_aux
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    return {
+        "wg": dense_specs(D, F, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
+        "wu": dense_specs(D, F, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
+        "wd": dense_specs(F, D, cfg.emt, axes=("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def mlp(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str):
+    act = common.activation(cfg.act)
+    aux = new_aux()
+    g, a = emt_dense(params["wg"], x, cfg.emt, tag=f"{tag}/wg", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    u, a = emt_dense(params["wu"], x, cfg.emt, tag=f"{tag}/wu", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    h = act(g) * u
+    h = ctx.shard(h, ("batch", "seq", "mlp"))
+    y, a = emt_dense(params["wd"], h, cfg.emt, tag=f"{tag}/wd", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    return y, aux

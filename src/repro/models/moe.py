@@ -1,0 +1,144 @@
+"""GShard-style top-k mixture of experts on EMT crossbars.
+
+Dispatch/combine use dense one-hot einsums (robust under pjit SPMD partitioning;
+the gather-based variant is a documented hillclimb alternative).  Tokens are
+processed in fixed-size groups so the dispatch tensor stays bounded regardless of
+global batch; experts shard over the `model` mesh axis (expert parallelism).
+
+Expert weights are (E, D, F) stacks; EMT quantization + RTN fluctuation is applied
+to the whole stack through one folded 2D hash draw (see `_emt_stacked`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import regularizer
+from repro.core.emt_linear import new_aux
+from repro.core.noise import fluctuate
+from repro.core.quant import quantize_weights
+from repro.nn.param import ParamSpec, fan_in_init, constant_init, normal_init
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+
+GROUP_SIZE = 2048  # tokens per dispatch group
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    specs = {
+        "router": {"w": ParamSpec((D, E), jnp.float32, ("embed", None),
+                                  normal_init(0.02))},
+        "wg": ParamSpec((E, D, F), cfg.dtype, ("expert", "embed", "mlp"),
+                        fan_in_init(fan_axis=1)),
+        "wu": ParamSpec((E, D, F), cfg.dtype, ("expert", "embed", "mlp"),
+                        fan_in_init(fan_axis=1)),
+        "wd": ParamSpec((E, F, D), cfg.dtype, ("expert", "mlp", "embed"),
+                        fan_in_init(fan_axis=1)),
+    }
+    if cfg.emt.active:
+        specs["rho_raw"] = ParamSpec(
+            (), jnp.float32, (),
+            constant_init(regularizer.rho_init_raw(cfg.emt.rho_init)))
+    return specs
+
+
+def _emt_stacked(w, rho, cfg: ModelConfig, ctx: Ctx, tag: str):
+    """Quantize + fluctuate a stacked (E, D, F) expert weight as EMT crossbars."""
+    emt = cfg.emt
+    if not emt.active:
+        return w
+    wq, _ = quantize_weights(w, emt.quant)
+    e, d, f = wq.shape
+    w2 = wq.reshape(e * d, f)
+    from repro.core.emt_linear import _tag_plane  # stable per-layer plane
+    wn = fluctuate(w2, rho, emt.device, emt.noise,
+                   key=None if ctx.key is None else jax.random.fold_in(
+                       ctx.key, _tag_plane(tag)),
+                   seed=ctx.seed, plane=_tag_plane(tag))
+    return wn.reshape(e, d, f)
+
+
+def moe_ffn(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str):
+    """x: (B, S, D) -> (B, S, D). Returns (y, aux)."""
+    B, S, D = x.shape
+    E = cfg.num_experts
+    K = cfg.experts_per_token
+    F = cfg.moe_d_ff or cfg.d_ff
+    T = B * S
+    sg = min(GROUP_SIZE, T)
+    assert T % sg == 0, (T, sg)
+    G = T // sg
+    cap = int(np.ceil(sg / E * cfg.capacity_factor * K))
+    cap = max(4, min(sg, -(-cap // 4) * 4))
+
+    xt = x.reshape(G, sg, D)
+    xt = ctx.shard(xt, ("batch", None, "embed"))
+
+    # --- routing (fp32) -----------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ params["router"]["w"])        # (G, s, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                     # (G, s, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # --- capacity assignment --------------------------------------------------
+    # one-hot over experts per (token, k): (G, s, K, E)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    # position of each (token,k) within its expert queue
+    pos = jnp.cumsum(onehot.reshape(G, sg * K, E), axis=1).reshape(
+        G, sg, K, E) * onehot - 1.0
+    keep = (pos >= 0) & (pos < cap)
+    # dispatch tensor (G, s, E, cap)
+    pos_cap = jax.nn.one_hot(jnp.where(keep, pos, -1), cap, dtype=jnp.float32)
+    disp = jnp.einsum("gske,gskec->gsec", onehot, pos_cap * keep[..., None])
+    comb = jnp.einsum("gske,gskec,gsk->gsec", onehot,
+                      pos_cap * keep[..., None], gate_vals)
+
+    # --- dispatch -> experts -> combine ---------------------------------------
+    disp = disp.astype(cfg.dtype)
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp, xt)                # (G,E,cap,D)
+    expert_in = ctx.shard(expert_in, ("batch", "expert", None, "embed"))
+
+    rho = (regularizer.rho_from_raw(params["rho_raw"])
+           if cfg.emt.active else jnp.float32(1.0))
+    wg = _emt_stacked(params["wg"], rho, cfg, ctx, f"{tag}/wg")
+    wu = _emt_stacked(params["wu"], rho, cfg, ctx, f"{tag}/wu")
+    wd = _emt_stacked(params["wd"], rho, cfg, ctx, f"{tag}/wd")
+
+    act = common.activation(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", expert_in, wg)) * \
+        jnp.einsum("gecd,edf->gecf", expert_in, wu)
+    h = ctx.shard(h, ("batch", "expert", None, "mlp"))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, wd)                  # (G,E,cap,D)
+
+    y = jnp.einsum("gsec,gecd->gsd", comb.astype(cfg.dtype), expert_out)
+    y = y.reshape(B, S, D)
+
+    # --- aux: load-balance + z losses (fp32), EMT accounting -------------------
+    aux = new_aux()
+    me = jnp.mean(probs, axis=(0, 1))                                 # (E,)
+    ce = jnp.mean(onehot.sum(2), axis=(0, 1))                         # (E,)
+    aux["aux_loss"] = (cfg.router_aux_weight * E * jnp.sum(me * ce)
+                       + 1e-3 * jnp.mean(
+                           jnp.square(jax.nn.logsumexp(logits, axis=-1))))
+    if cfg.emt.active and cfg.emt.energy_accounting != "off":
+        tokens_per_expert = float(T) * K / E
+        for w in (wg, wu, wd):
+            aux["reg"] = aux["reg"] + regularizer.layer_reg_term(
+                w, rho, alpha=1.0) / w.shape[-1]
+            aux["cells"] += int(np.prod(w.shape))
+        x_level = jax.lax.stop_gradient(jnp.mean(jnp.abs(expert_in))) * 32.0
+        w_norm = jax.lax.stop_gradient(
+            sum(jnp.sum(jnp.abs(w.astype(jnp.float32))) for w in (wg, wu, wd)))
+        aux["energy_pj"] = cfg.emt.device.mac_energy(
+            jax.lax.stop_gradient(rho), w_norm / jnp.maximum(
+                jnp.max(jnp.abs(wg)), 1e-8), x_level,
+            tokens_per_expert / max(1, E))
+        aux["energy_pj"] = jnp.float32(aux["energy_pj"])
+        aux["reads"] = jnp.float32(T * K * D)
+        aux["rho_sum"] = jax.lax.stop_gradient(rho)
+        aux["rho_layers"] = 1
+    return y, aux

@@ -1,0 +1,179 @@
+"""Layer stack: builds and applies heterogeneous block sequences.
+
+Block kinds (from ModelConfig.layer_pattern): "attn" | "global" (full causal
+attention), "local" (sliding window), "mamba", "mlstm", "slstm".  Attention/mamba
+blocks carry an FFN (dense GLU or MoE per `moe_layer_mask`); xLSTM blocks embed
+their own projections.
+
+Layers are python-unrolled (dict keyed "layer_NN") — DESIGN.md §7: dry-run graphs
+must not contain while loops for cost/collective measurement exactness.  Remat
+(jax.checkpoint) wraps each block in training mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.emt_linear import new_aux, add_aux
+from repro.models import common
+from repro.models.attention import attention_specs, self_attention, cross_attention
+from repro.models.mlp import mlp_specs, mlp
+from repro.models.moe import moe_specs, moe_ffn
+from repro.models.mamba import mamba_specs, mamba, mamba_state_specs
+from repro.models.xlstm import (mlstm_specs, mlstm, mlstm_state_specs,
+                                slstm_specs, slstm, slstm_state_specs)
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+
+ATTN_KINDS = ("attn", "global", "local")
+
+
+def block_specs(cfg: ModelConfig, kind: str, use_moe: bool,
+                cross: bool = False) -> dict:
+    specs = {"norm1": common.rmsnorm_specs(cfg.d_model)}
+    if kind in ATTN_KINDS:
+        specs["attn"] = attention_specs(cfg)
+    elif kind == "mamba":
+        specs["mamba"] = mamba_specs(cfg)
+    elif kind == "mlstm":
+        specs["mlstm"] = mlstm_specs(cfg)
+        return specs                         # self-contained block
+    elif kind == "slstm":
+        specs["slstm"] = slstm_specs(cfg)
+        return specs
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cross:
+        specs["norm_x"] = common.rmsnorm_specs(cfg.d_model)
+        specs["xattn"] = attention_specs(cfg, cross=True)
+    if cfg.d_ff > 0 or use_moe:
+        specs["norm2"] = common.rmsnorm_specs(cfg.d_model)
+        specs["ffn"] = moe_specs(cfg) if use_moe else mlp_specs(cfg)
+    return specs
+
+
+def block_state_specs(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      cross_len: int = 0):
+    """Abstract decode-cache entries for one block."""
+    if kind in ATTN_KINDS:
+        # sliding-window layers keep a ring buffer of `window` slots — the
+        # cache for a 32k context shrinks window/32k (64x for gemma3)
+        length = max_len
+        if kind == "local" and cfg.sliding_window:
+            length = min(max_len, cfg.sliding_window)
+        kv = {"k": jax.ShapeDtypeStruct(
+                  (batch, length, cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+              "v": jax.ShapeDtypeStruct(
+                  (batch, length, cfg.num_kv_heads, cfg.head_dim), cfg.dtype)}
+        if cross_len:
+            kv["ck"] = jax.ShapeDtypeStruct(
+                (batch, cross_len, cfg.num_kv_heads, cfg.head_dim), cfg.dtype)
+            kv["cv"] = jax.ShapeDtypeStruct(
+                (batch, cross_len, cfg.num_kv_heads, cfg.head_dim), cfg.dtype)
+        return kv
+    if kind == "mamba":
+        return mamba_state_specs(cfg, batch)
+    if kind == "mlstm":
+        return mlstm_state_specs(cfg, batch)
+    if kind == "slstm":
+        return slstm_state_specs(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
+                tag: str, ctx: Ctx, positions=None, positions3=None, mask=None,
+                cache: Optional[dict] = None, cache_index=None,
+                enc_out=None, enc_mask=None):
+    """One residual block. Returns (y, aux, new_cache_or_None)."""
+    aux = new_aux()
+    new_cache = {}
+    h = common.rmsnorm(params["norm1"], x, cfg.norm_eps)
+
+    if kind in ATTN_KINDS:
+        window = cfg.sliding_window if kind == "local" else 0
+        m = mask["local"] if (kind == "local" and isinstance(mask, dict)) else (
+            mask["global"] if isinstance(mask, dict) else mask)
+        y, a, kv = self_attention(
+            params["attn"], h, cfg.replace(sliding_window=window),
+            positions=positions, mask=m, ctx=ctx, tag=f"{tag}/attn",
+            cache=cache, cache_index=cache_index, positions3=positions3)
+        aux = add_aux(aux, a)
+        if kv:
+            new_cache.update(kv)
+        x = x + y
+        if enc_out is not None or (cache is not None and "ck" in (cache or {})):
+            hx = common.rmsnorm(params["norm_x"], x, cfg.norm_eps)
+            y, a, ckv = cross_attention(
+                params["xattn"], hx, cfg, enc_out=enc_out, enc_mask=enc_mask,
+                ctx=ctx, tag=f"{tag}/xattn", cache=cache)
+            aux = add_aux(aux, a)
+            if ckv:
+                new_cache.update(ckv)
+            x = x + y
+    elif kind == "mamba":
+        y, a, st = mamba(params["mamba"], h, cfg, ctx=ctx, tag=f"{tag}/mamba",
+                         state=cache)
+        aux = add_aux(aux, a)
+        new_cache = st
+        x = x + y
+    elif kind == "mlstm":
+        y, a, st = mlstm(params["mlstm"], h, cfg, ctx=ctx, tag=f"{tag}/mlstm",
+                         state=cache)
+        aux = add_aux(aux, a)
+        return x + y, aux, st
+    elif kind == "slstm":
+        y, a, st = slstm(params["slstm"], h, cfg, ctx=ctx, tag=f"{tag}/slstm",
+                         state=cache)
+        aux = add_aux(aux, a)
+        return x + y, aux, st
+    else:
+        raise ValueError(kind)
+
+    if "ffn" in params:
+        h = common.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if use_moe:
+            y, a = moe_ffn(params["ffn"], h, cfg, ctx=ctx, tag=f"{tag}/moe")
+        else:
+            y, a = mlp(params["ffn"], h, cfg, ctx=ctx, tag=f"{tag}/mlp")
+        aux = add_aux(aux, a)
+        x = x + y
+    return x, aux, (new_cache or None)
+
+
+def stack_specs(cfg: ModelConfig, num_layers: int, kinds, moe_mask,
+                cross: bool = False) -> dict:
+    return {f"layer_{i:03d}": block_specs(cfg, kinds[i], moe_mask[i], cross)
+            for i in range(num_layers)}
+
+
+def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
+                tag: str, positions=None, positions3=None, mask=None,
+                caches: Optional[dict] = None, cache_index=None,
+                enc_out=None, enc_mask=None, remat: bool = False):
+    """Apply the whole stack. caches: dict layer_name -> block cache."""
+    aux = new_aux()
+    new_caches = {}
+    for i, kind in enumerate(kinds):
+        name = f"layer_{i:03d}"
+        p = params[name]
+        cache = None if caches is None else caches.get(name)
+
+        def run(p, x, cache=cache, kind=kind, use_moe=moe_mask[i], name=name):
+            return apply_block(p, x, cfg, kind=kind, use_moe=use_moe,
+                               tag=f"{tag}/{name}", ctx=ctx, positions=positions,
+                               positions3=positions3, mask=mask, cache=cache,
+                               cache_index=cache_index, enc_out=enc_out,
+                               enc_mask=enc_mask)
+
+        if remat:
+            x, a, upd = jax.checkpoint(
+                lambda p, x: run(p, x), static_argnums=())(p, x)
+        else:
+            x, a, upd = run(p, x)
+        aux = add_aux(aux, a)
+        if upd is not None:
+            new_caches[name] = upd
+        x = ctx.shard(x, ("batch", "seq", "embed"))
+    return x, aux, new_caches

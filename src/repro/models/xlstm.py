@@ -1,0 +1,244 @@
+"""xLSTM blocks — chunkwise-parallel mLSTM (matrix memory) and sLSTM.
+
+TPU formulation (DESIGN.md §Arch-applicability):
+
+* Gates are bounded (`f = sigmoid`, `i = exp(min(ĩ,0)) = sigmoid-like ≤ 1`) so all
+  decay exponents are ≤ 0 and the running-max stabilizer of the original paper is
+  unnecessary — the chunkwise form becomes plain linear algebra with no `while`
+  loops (chunks python-unrolled, inter-chunk state algebra exact).
+* sLSTM is implemented input-gated (recurrent R-matrices = 0) so the scalar-memory
+  recurrence is a linear scan computable with `associative_scan`; the exact
+  R-recurrent variant is available via `slstm_recurrent=True` (lax.scan; used in
+  correctness tests, not in dry-run graphs).
+* EMT: all projections (qkv/gates/up/down) are crossbar matmuls; the state update
+  itself is not a stored-weight MAC and runs ideal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.emt_linear import emt_dense, dense_specs, new_aux, add_aux
+from repro.nn.param import ParamSpec, constant_init
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+
+MLSTM_CHUNK = 2048
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    DI = 2 * D                       # projection factor 2 (xLSTM paper)
+    H = cfg.num_heads
+    return {
+        "up": dense_specs(D, 2 * DI, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
+        "conv_w": ParamSpec((4, DI), cfg.dtype, (None, "mlp"), constant_init(0.1)),
+        "conv_b": ParamSpec((DI,), cfg.dtype, ("mlp",), constant_init(0.0)),
+        "wq": dense_specs(DI, DI, cfg.emt, axes=("mlp", "heads"), dtype=cfg.dtype),
+        "wk": dense_specs(DI, DI, cfg.emt, axes=("mlp", "heads"), dtype=cfg.dtype),
+        "wv": dense_specs(DI, DI, cfg.emt, axes=("mlp", "heads"), dtype=cfg.dtype),
+        "wi": dense_specs(DI, H, cfg.emt, axes=("mlp", None), dtype=cfg.dtype, bias=True),
+        "wf": dense_specs(DI, H, cfg.emt, axes=("mlp", None), dtype=cfg.dtype, bias=True),
+        "out_norm": common.rmsnorm_specs(DI),
+        "down": dense_specs(DI, D, cfg.emt, axes=("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, C0, n0):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (B,H,c,hd); log_f, log_i: (B,H,c) (both ≤ 0). C0: (B,H,hd,hd),
+    n0: (B,H,hd). Returns (y (B,H,c,hd), C1, n1).
+    """
+    hd = q.shape[-1]
+    lfc = jnp.cumsum(log_f, axis=-1)                        # inclusive Π f up to t
+    lf_total = lfc[..., -1]
+    # intra-chunk decay matrix: d_tj = lfc_t - lfc_j + log_i_j   (j <= t)
+    d = lfc[..., :, None] - lfc[..., None, :] + log_i[..., None, :]
+    c = q.shape[2]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    att = jnp.einsum("bhtd,bhjd->bhtj", q, k) / np.sqrt(hd)
+    att = att * jnp.exp(d) * tri
+    y_intra = jnp.einsum("bhtj,bhjd->bhtd", att, v)
+    n_intra = jnp.einsum("bhtj,bhjd->bhtd", jnp.exp(d) * tri, k)
+
+    # inter-chunk: state from previous chunks decayed to t
+    decay_t = jnp.exp(lfc)[..., None]                       # (B,H,c,1)
+    y_inter = jnp.einsum("bhtd,bhde->bhte", q, C0) * decay_t / np.sqrt(hd)
+    n_inter = n0[:, :, None] * decay_t
+
+    n_t = n_intra + n_inter
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhtd,bhtd->bht", q, n_t)) / np.sqrt(hd), 1.0)
+    y = (y_intra + y_inter) / denom[..., None]
+
+    # state update to end of chunk
+    w = jnp.exp(lf_total[..., None] - lfc + log_i)          # (B,H,c)
+    C1 = jnp.exp(lf_total)[..., None, None] * C0 + \
+        jnp.einsum("bhj,bhjd,bhje->bhde", w, k, v)
+    n1 = jnp.exp(lf_total)[..., None] * n0 + jnp.einsum("bhj,bhjd->bhd", w, k)
+    return y, C1, n1
+
+
+def mlstm(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
+    """Returns (y, aux, new_state); state = {"C": (B,H,hd,hd), "n": (B,H,hd),
+    "conv": (B,3,DI)}."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    DI = 2 * D
+    hd = DI // H
+    aux = new_aux()
+
+    up, a = emt_dense(params["up"], x, cfg.emt, tag=f"{tag}/up", seed=ctx.seed,
+                      key=ctx.key)
+    aux = add_aux(aux, a)
+    xm, z = jnp.split(up, 2, axis=-1)
+
+    from repro.models.mamba import _causal_depthwise_conv
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_depthwise_conv(xm, params["conv_w"], params["conv_b"],
+                                          conv_state)
+    xc = jax.nn.silu(xc)
+
+    outs = {}
+    for nm, src in (("wq", xc), ("wk", xc), ("wv", xm)):
+        o, a = emt_dense(params[nm], src, cfg.emt, tag=f"{tag}/{nm}",
+                         seed=ctx.seed, key=ctx.key)
+        aux = add_aux(aux, a)
+        outs[nm] = o.reshape(B, S, H, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    q, k, v = outs["wq"], outs["wk"], outs["wv"]
+
+    gi, a = emt_dense(params["wi"], xc, cfg.emt, tag=f"{tag}/wi", seed=ctx.seed,
+                      key=ctx.key)
+    aux = add_aux(aux, a)
+    gf, a = emt_dense(params["wf"], xc, cfg.emt, tag=f"{tag}/wf", seed=ctx.seed,
+                      key=ctx.key)
+    aux = add_aux(aux, a)
+    log_i = -jax.nn.softplus(-gi.astype(jnp.float32)).transpose(0, 2, 1)  # ≤ 0
+    log_f = jax.nn.log_sigmoid(gf.astype(jnp.float32)).transpose(0, 2, 1)  # ≤ 0
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state["C"]
+    n0 = jnp.zeros((B, H, hd), jnp.float32) if state is None else state["n"]
+
+    ys = []
+    chunk = min(MLSTM_CHUNK, S)
+    for s0 in range(0, S, chunk):
+        sl = slice(s0, s0 + chunk)
+        y, C0, n0 = _mlstm_chunk(q[:, :, sl], k[:, :, sl], v[:, :, sl],
+                                 log_f[:, :, sl], log_i[:, :, sl], C0, n0)
+        ys.append(y)
+    y = jnp.concatenate(ys, axis=2)                          # (B,H,S,hd)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, DI).astype(cfg.dtype)
+    y = common.rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out, a = emt_dense(params["down"], y, cfg.emt, tag=f"{tag}/down",
+                       seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    return out, aux, {"C": C0, "n": n0, "conv": new_conv}
+
+
+def mlstm_state_specs(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    DI = 2 * cfg.d_model
+    hd = DI // H
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, DI), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    F = -(-4 * D // 3 // 128) * 128   # proj factor 4/3, aligned
+    return {
+        "wz": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
+        "wi": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
+        "wf": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
+        "wo": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
+        # exact-variant recurrent matrices (used only when slstm_recurrent=True)
+        "rz": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
+        "ri": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
+        "rf": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
+        "ro": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
+        "up": dense_specs(D, 2 * F, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
+        "down": dense_specs(F, D, cfg.emt, axes=("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _slstm_gates(params, x, cfg, ctx, tag, aux, h_prev=None):
+    outs = {}
+    for nm in ("wz", "wi", "wf", "wo"):
+        o, a = emt_dense(params[nm], x, cfg.emt, tag=f"{tag}/{nm}",
+                         seed=ctx.seed, key=ctx.key)
+        aux = add_aux(aux, a)
+        if h_prev is not None:
+            o = o + h_prev @ params["r" + nm[1]]
+        outs[nm] = o.astype(jnp.float32)
+    return outs, aux
+
+
+def slstm(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
+    """Returns (y, aux, new_state); state = {"c": (B,D), "n": (B,D)}."""
+    B, S, D = x.shape
+    aux = new_aux()
+
+    if cfg.slstm_recurrent and S > 1:
+        # exact recurrence (tests only — introduces a while loop)
+        def step(carry, xt):
+            c, n, h = carry
+            g, _ = _slstm_gates(params, xt[:, None], cfg, ctx, tag, new_aux(),
+                                h_prev=h[:, None])
+            z = jnp.tanh(g["wz"][:, 0])
+            i = jnp.exp(jnp.minimum(g["wi"][:, 0], 0.0))
+            f = jax.nn.sigmoid(g["wf"][:, 0])
+            o = jax.nn.sigmoid(g["wo"][:, 0])
+            c = f * c + i * z
+            n = f * n + i
+            h = (o * c / jnp.maximum(n, 1.0)).astype(x.dtype)
+            return (c, n, h), h
+        init = (jnp.zeros((B, D), jnp.float32), jnp.zeros((B, D), jnp.float32),
+                jnp.zeros((B, D), x.dtype))
+        (_, _, _), hs = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2)
+        new_state = None
+    else:
+        g, aux = _slstm_gates(params, x, cfg, ctx, tag, aux)
+        z = jnp.tanh(g["wz"])
+        log_i = jnp.minimum(g["wi"], 0.0)
+        log_f = jax.nn.log_sigmoid(g["wf"])
+        o = jax.nn.sigmoid(g["wo"])
+        f = jnp.exp(log_f)
+        i = jnp.exp(log_i)
+        c0 = None if state is None else state["c"]
+        n0 = None if state is None else state["n"]
+        from repro.models.mamba import _selective_scan
+        if S == 1 and c0 is not None:
+            c_all = (f[:, 0] * c0 + i[:, 0] * z[:, 0])[:, None]
+            n_all = (f[:, 0] * n0 + i[:, 0])[:, None]
+        else:
+            c_all, _ = _selective_scan(f, i * z, c0)
+            n_all, _ = _selective_scan(f, i, n0)
+        h = (o * c_all / jnp.maximum(n_all, 1.0)).astype(x.dtype)
+        new_state = {"c": c_all[:, -1], "n": n_all[:, -1]}
+
+    up, a = emt_dense(params["up"], h, cfg.emt, tag=f"{tag}/up", seed=ctx.seed,
+                      key=ctx.key)
+    aux = add_aux(aux, a)
+    u, gglu = jnp.split(up, 2, axis=-1)
+    y, a = emt_dense(params["down"], jax.nn.gelu(gglu) * u, cfg.emt,
+                     tag=f"{tag}/down", seed=ctx.seed, key=ctx.key)
+    aux = add_aux(aux, a)
+    return y, aux, new_state
+
+
+def slstm_state_specs(cfg: ModelConfig, batch: int):
+    return {"c": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.float32)}

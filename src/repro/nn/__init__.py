@@ -1,0 +1,1 @@
+from repro.nn.param import ParamSpec, init_params, abstract_params, axes_tree, param_shardings

@@ -1,0 +1,147 @@
+"""Parameter-spec system.
+
+Every model module declares its parameters as a nested dict of :class:`ParamSpec`,
+which carries shape, dtype, *logical axis names*, and an initializer.  From the spec
+tree we can
+
+* materialize real parameters (``init_params``),
+* build ``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run
+  (``abstract_params`` — no allocation), and
+* derive ``NamedSharding``s by mapping logical axes to mesh axes through a rule table
+  (``param_shardings``).
+
+This is the glue that makes the same model definition runnable on 1 CPU device and
+compilable for a 512-chip multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def constant_init(value: float) -> Initializer:
+    def init(key, shape, dtype):
+        del key
+        return jnp.full(shape, value, dtype)
+    return init
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return init
+
+
+def fan_in_init(scale: float = 1.0, fan_axis: int = -2) -> Initializer:
+    """LeCun-style: stddev = scale / sqrt(fan_in). fan_axis indexes the input dim."""
+    def init(key, shape, dtype):
+        fan_in = shape[fan_axis] if len(shape) >= 2 else shape[0]
+        std = scale / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    return init
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+    shape: tuple
+    dtype: Any = jnp.float32
+    axes: tuple = ()            # logical axis name per dim, e.g. ("embed", "mlp")
+    init: Initializer = dataclasses.field(default=normal_init())
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a spec tree into real arrays. Deterministic per tree path."""
+    flat, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(1, len(flat)))
+    leaves = [s.init(k, s.shape, s.dtype) for s, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree — used by the dry-run; never allocates."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs):
+    """Tree of logical-axes tuples mirroring the parameter tree."""
+    return jax.tree.map(lambda s: tuple(s.axes), specs, is_leaf=_is_spec)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: dict,
+                     mesh: Mesh, shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to mesh axes through `rules`.
+
+    A rule value may be None (replicate), a mesh-axis name, or a tuple of mesh-axis
+    names. A mesh axis may be consumed at most once per param; later conflicting
+    requests fall back to replication (standard MaxText-style behaviour).  When
+    `shape` is given, mesh axes whose size does not divide the dim are dropped
+    (e.g. a 1-KV-head cache dim is never sharded 16-way).
+    """
+    mesh_axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    out = []
+    for i, name in enumerate(axes):
+        target = rules.get(name) if name is not None else None
+        if target is None:
+            out.append(None)
+            continue
+        targets = target if isinstance(target, tuple) else (target,)
+        picked = []
+        dim = None if shape is None else int(shape[i])
+        for t in targets:
+            if t in used or t not in mesh_axes:
+                continue
+            if dim is not None:
+                factor = sizes[t]
+                cur = 1
+                for p in picked:
+                    cur *= sizes[p]
+                if dim % (cur * factor) != 0:
+                    continue
+            picked.append(t)
+        for t in picked:
+            used.add(t)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def param_shardings(specs, mesh: Mesh, rules: dict):
+    """NamedSharding tree for a spec tree under the given mesh + rule table."""
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, logical_to_pspec(s.axes, rules, mesh, s.shape))
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (RULES, make_shard_fn, batch_shardings,
+                                     cache_shardings, activation_pspec)
+from repro.parallel.collectives import compressed_psum_pod, hierarchical_pmean

@@ -1,0 +1,106 @@
+"""Serving runtime: sharded prefill/decode steps + a batched generation engine.
+
+``serve_step`` (decode) is THE artifact the decode_32k / long_500k dry-run cells
+lower: one new token against a seq_len KV cache, with all projections running as
+EMT analog (optionally bit-serial, technique C) crossbar reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.nn.param import abstract_params, param_shardings
+from repro.parallel.sharding import (RULES, make_shard_fn, batch_shardings,
+                                     cache_shardings)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
+    shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
+
+    def prefill_step(params, batch, cache, seed):
+        ctx = Ctx(seed=seed, shard=shard)
+        return lm.prefill(params, batch, cfg, ctx, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
+    shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
+
+    def decode_step(params, cache, tokens, index, seed):
+        ctx = Ctx(seed=seed, shard=shard)
+        logits, cache, aux = lm.decode_step(params, cache, tokens, index, cfg, ctx)
+        return logits, cache, aux["energy_pj"]
+
+    return decode_step
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                    rules_name: str = "serve_2d"):
+    """(param_shardings, cache_shardings, cache_specs) for the serving mesh."""
+    rules = RULES[rules_name]
+    pspecs = lm.specs(cfg)
+    psh = param_shardings(pspecs, mesh, rules)
+    cspecs = lm.init_cache_specs(cfg, batch, max_len)
+    csh = cache_shardings(cspecs, mesh, rules)
+    return psh, csh, cspecs, rules
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt: np.ndarray               # (S,) int32
+    max_new: int = 16
+    temperature: float = 0.0
+
+
+class ServingEngine:
+    """Minimal batched engine: pads requests to a fixed batch, prefills once,
+    then decodes greedily step by step (single host; the sharded steps are the
+    same functions the multi-pod dry-run compiles)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_size: int, max_len: int,
+                 mesh: Optional[Mesh] = None, rules=None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.seed = seed
+        self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
+        self._decode = jax.jit(make_decode_step(cfg, mesh, rules),
+                               donate_argnums=(1,))
+
+    def generate(self, requests):
+        assert len(requests) <= self.batch_size
+        B = self.batch_size
+        S = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - len(r.prompt):] = r.prompt      # left-pad
+        cache = lm.init_cache(self.cfg, B, self.max_len)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.input_kind == "embeds":
+            batch["embeds"] = jnp.zeros((B, S, self.cfg.d_model), jnp.float32)
+        if self.cfg.is_encdec:
+            batch["enc_embeds"] = jnp.zeros((B, S, self.cfg.d_model), jnp.float32)
+        cache, logits, _ = self._prefill(self.params, batch, cache,
+                                         jnp.uint32(self.seed))
+        max_new = max(r.max_new for r in requests)
+        out = [[] for _ in range(B)]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        energy = 0.0
+        for t in range(max_new):
+            for i in range(len(requests)):
+                out[i].append(int(tok[i]))
+            logits, cache, e = self._decode(self.params, cache, tok, S + t,
+                                            jnp.uint32(self.seed + t + 1))
+            energy += float(e)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return [np.asarray(o) for o in out[:len(requests)]], energy

@@ -1,0 +1,5 @@
+from repro.train.optimizer import (Optimizer, OptimizerConfig, cosine_schedule,
+                                   constant_schedule, clip_by_global_norm)
+from repro.train.step import (TrainConfig, make_train_step, jit_train_step,
+                              init_state, make_state_shardings)
+from repro.train.loop import LoopConfig, train_loop

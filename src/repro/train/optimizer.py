@@ -1,0 +1,164 @@
+"""Optimizers from scratch: SGD-momentum, AdamW, Adafactor.
+
+Each optimizer exposes
+
+    init(params)                      -> state (pytree of dicts mirroring params)
+    update(grads, state, params, lr)  -> (new_params, new_state)
+    state_shardings(param_shardings, param_specs) -> shardings for `state`
+
+State trees mirror the parameter tree leaf-for-leaf (Adafactor leaves are dicts of
+factored moments), so ZeRO-style sharding falls out of the parameter shardings.
+Updates are computed in fp32 regardless of parameter dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | sgd | adafactor
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_factored: int = 128
+
+
+class Optimizer:
+    def __init__(self, cfg: OptimizerConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, params):
+        c = self.cfg
+        if c.name == "sgd":
+            return jax.tree.map(
+                lambda p: {"m": jnp.zeros(p.shape, jnp.float32)}, params)
+        if c.name == "adamw":
+            return jax.tree.map(
+                lambda p: {"m": jnp.zeros(p.shape, jnp.float32),
+                           "v": jnp.zeros(p.shape, jnp.float32)}, params)
+        if c.name == "adafactor":
+            def one(p):
+                if p.ndim >= 2 and min(p.shape[-2:]) >= c.min_dim_factored:
+                    return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                            jnp.float32)}
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return jax.tree.map(one, params)
+        raise ValueError(c.name)
+
+    # ---------------------------------------------------------------- update
+    def update(self, grads, state, params, lr, step):
+        c = self.cfg
+        stepf = step.astype(jnp.float32) + 1.0
+
+        def upd(path_g, s, p):
+            g = path_g.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            if c.name == "sgd":
+                m = c.momentum * s["m"] + g
+                delta = lr * m
+                new_s = {"m": m}
+            elif c.name == "adamw":
+                m = c.b1 * s["m"] + (1 - c.b1) * g
+                v = c.b2 * s["v"] + (1 - c.b2) * g * g
+                mh = m / (1 - c.b1 ** stepf)
+                vh = v / (1 - c.b2 ** stepf)
+                delta = lr * (mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * pf)
+                new_s = {"m": m, "v": v}
+            else:  # adafactor (no momentum, factored second moment)
+                beta2 = 1.0 - stepf ** (-c.decay_rate)
+                g2 = g * g + 1e-30
+                if "vr" in s:
+                    vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                    vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                    r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                         1e-30)
+                    precond = 1.0 / jnp.sqrt(
+                        r[..., None] * vc[..., None, :] + 1e-30)
+                    new_s = {"vr": vr, "vc": vc}
+                else:
+                    v = beta2 * s["v"] + (1 - beta2) * g2
+                    precond = 1.0 / jnp.sqrt(v + 1e-30)
+                    new_s = {"v": v}
+                u = g * precond
+                # update clipping (Adafactor RMS rule)
+                rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+                u = u / jnp.maximum(1.0, rms)
+                delta = lr * (u + c.weight_decay * pf)
+            return (pf - delta).astype(p.dtype), new_s
+
+        flat_g, td = jax.tree_util.tree_flatten(grads)
+        flat_s = td.flatten_up_to(state)
+        flat_p = td.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+        new_state = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+        return new_params, new_state
+
+    # -------------------------------------------------------------- sharding
+    def shardings_from_abstract(self, abstract_state, param_shardings, mesh):
+        """Build state shardings by matching each state leaf against its param's
+        sharding: same-rank leaves reuse it; factored leaves drop the removed dim."""
+        def one(psh, sdict, aval_dict):
+            out = {}
+            spec = list(psh.spec) if psh is not None else []
+            for k, aval in aval_dict.items():
+                rank = len(aval.shape)
+                if k in ("m", "v") and rank == len(spec):
+                    out[k] = psh
+                elif k == "vr":   # param.shape[:-1]
+                    out[k] = NamedSharding(mesh, P(*spec[:-1])) if spec else \
+                        NamedSharding(mesh, P())
+                elif k == "vc":   # param.shape[:-2] + [-1]
+                    s = tuple(spec[:-2]) + tuple(spec[-1:]) if len(spec) >= 2 \
+                        else tuple(spec)
+                    out[k] = NamedSharding(mesh, P(*s))
+                else:
+                    out[k] = NamedSharding(mesh, P(*([None] * rank)))
+            return out
+
+        flat_p, td = jax.tree_util.tree_flatten(param_shardings)
+        flat_a = td.flatten_up_to(abstract_state)
+        out = [one(p, None, a) for p, a in zip(flat_p, flat_a)]
+        return jax.tree_util.tree_unflatten(td, out)
+
+
+# ---------------------------------------------------------------- schedules
+def cosine_schedule(base_lr, warmup: int, total: int, min_ratio=0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+        t = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, base_lr * cos)
+    return lr
+
+
+def constant_schedule(base_lr):
+    return lambda step: jnp.float32(base_lr)

@@ -1,0 +1,106 @@
+"""Distributed train/serve step builders.
+
+``make_train_step`` assembles loss -> grad -> clip -> (optionally pod-compressed
+reduce) -> optimizer into one jittable function with full in/out shardings derived
+from the parameter specs — the single artifact the dry-run lowers and the training
+loop executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.nn.param import abstract_params, param_shardings
+from repro.parallel.sharding import make_shard_fn, batch_shardings, RULES
+from repro.train.optimizer import Optimizer, OptimizerConfig, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lam: float = 1e-6                   # technique-B regularization weight
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    clip_norm: float = 1.0
+    opt: OptimizerConfig = OptimizerConfig()
+
+
+def make_state_specs(cfg: ModelConfig, opt: Optimizer):
+    """Abstract (ShapeDtypeStruct) train state — dry-run input, no allocation."""
+    pspecs = lm.specs(cfg)
+    aparams = abstract_params(pspecs)
+    astate = {
+        "params": aparams,
+        "opt": jax.eval_shape(opt.init, aparams),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return astate, pspecs
+
+
+def make_state_shardings(cfg: ModelConfig, opt: Optimizer, mesh: Mesh, rules):
+    astate, pspecs = make_state_specs(cfg, opt)
+    psh = param_shardings(pspecs, mesh, rules)
+    return {
+        "params": psh,
+        "opt": opt.shardings_from_abstract(astate["opt"], psh, mesh),
+        "step": NamedSharding(mesh, P()),
+    }, astate
+
+
+def init_state(cfg: ModelConfig, opt: Optimizer, key):
+    from repro.nn.param import init_params
+    params = init_params(lm.specs(cfg), key)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Optional[Mesh],
+                    rules: Optional[dict] = None, *, schedule=None):
+    """Returns train_step(state, batch) -> (state, metrics) (pure, jittable)."""
+    opt = Optimizer(tcfg.opt)
+    shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
+    if schedule is None:
+        from repro.train.optimizer import cosine_schedule
+        schedule = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+
+    def loss_fn(params, batch, step):
+        ctx = Ctx(seed=step.astype(jnp.uint32), shard=shard)
+        return lm.train_loss(params, batch, cfg, ctx, lam=tcfg.lam)
+
+    def train_step(state, batch):
+        step = state["step"]
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch, step)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = schedule(step)
+        new_params, new_opt = opt.update(grads, state["opt"], state["params"],
+                                         lr, step)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": new_params, "opt": new_opt, "step": step + 1}, metrics
+
+    return train_step, opt
+
+
+def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                   batch_specs: dict, rules_name: str = "train_fsdp_tp",
+                   donate: bool = True):
+    """Fully-sharded jitted step + the abstract state/batch specs (dry-run API)."""
+    rules = RULES[rules_name]
+    train_step, opt = make_train_step(cfg, tcfg, mesh, rules)
+    state_sh, astate = make_state_shardings(cfg, opt, mesh, rules)
+    batch_sh = batch_shardings(batch_specs, mesh, rules)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, state_sh, astate, opt

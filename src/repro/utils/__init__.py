@@ -1,0 +1,1 @@
+from repro.utils.pytrees import tree_size_bytes, tree_param_count, flatten_with_paths

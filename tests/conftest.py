@@ -1,0 +1,6 @@
+# NOTE: no --xla_force_host_platform_device_count here — smoke tests and benches
+# must see the real single CPU device; only launch/dryrun.py forces 512
+# (and tests/test_distributed.py spawns subprocesses that set it themselves).
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,66 @@
+"""Checkpoint manager: roundtrip, integrity, GC, async, elastic-template restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.arange(3.0)},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    st = _state(1.5)
+    mgr.save(7, st, extra={"note": "x"})
+    restored, meta = mgr.restore(7, _state())
+    assert meta["step"] == 7 and meta["extra"]["note"] == "x"
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 1.5)
+    assert int(restored["step"]) == 7
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(float(s)))
+    assert mgr.all_steps() == [3, 4]
+    restored, meta = mgr.restore_latest(_state())
+    assert meta["step"] == 4
+
+
+def test_integrity_check(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _state())
+    path = os.path.join(str(tmp_path), "step_000000001", "state.npz")
+    with open(path, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError):
+        mgr.restore(1, _state())
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(5, _state(2.0))
+    mgr.wait()
+    restored, _ = mgr.restore(5, _state())
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 2.0)
+
+
+def test_missing_tensor_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError):
+        mgr.restore(1, {"a": jnp.zeros(2), "b": jnp.zeros(3)})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"a": jnp.zeros(3)})

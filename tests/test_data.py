@@ -1,0 +1,48 @@
+"""Synthetic pipelines: determinism, resumability, learnable structure."""
+import numpy as np
+
+from repro.data.synthetic import SyntheticLM, SyntheticImages
+
+
+def test_lm_batches_deterministic_and_resumable():
+    d = SyntheticLM(vocab_size=128, seq_len=32, batch_size=4, seed=7)
+    a = d.batch_at(5)
+    b = d.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_lm_labels_are_next_tokens_mostly_predictable():
+    d = SyntheticLM(vocab_size=128, seq_len=64, batch_size=8, seed=0)
+    b = d.batch_at(0)
+    # the affine map holds for ~90% of transitions (10% noise flips)
+    pred = (b["tokens"] * 31 + b["labels"][:, :1] * 0) % 128   # a=31
+    # recover b from one known transition instead: check consistency rate of
+    # the affine rule across the batch
+    t, l = b["tokens"], b["labels"]
+    consistent = np.mean((l == (t * 31 + (l[0, 0] - t[0, 0] * 31) % 128) % 128))
+    assert consistent > 0.7
+
+
+def test_lm_host_sharding_changes_data():
+    d0 = SyntheticLM(vocab_size=64, seq_len=16, batch_size=4, host_id=0)
+    d1 = SyntheticLM(vocab_size=64, seq_len=16, batch_size=4, host_id=1)
+    assert not np.array_equal(d0.batch_at(0)["tokens"],
+                              d1.batch_at(0)["tokens"])
+
+
+def test_images_classes_distinct_and_split():
+    d = SyntheticImages(num_classes=4, image_size=16)
+    b = d.batch(64, 0)
+    assert b["images"].shape == (64, 16, 16, 3)
+    assert b["images"].min() >= 0 and b["images"].max() <= 1
+    means = [b["images"][b["labels"] == c].mean(axis=0)
+             for c in range(4) if (b["labels"] == c).any()]
+    # class templates differ
+    diffs = [np.abs(means[i] - means[j]).mean()
+             for i in range(len(means)) for j in range(i)]
+    assert min(diffs) > 0.02
+    tr = d.batch(32, 0, split="train")["images"]
+    te = d.batch(32, 0, split="test")["images"]
+    assert not np.allclose(tr, te)

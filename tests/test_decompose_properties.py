@@ -1,0 +1,86 @@
+"""Property tests (hypothesis) for technique C — the paper's Eqs. 16-20.
+
+sigma(O_new) <= sigma(O_ori)  and  E_new <= E_ori  for every input level, with
+equality only for 0/1-bit levels; plus Monte-Carlo confirmation on real matmuls.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose
+from repro.core.device import DeviceModel
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(0, 255))
+def test_sigma_ratio_leq_one(level):
+    """Eq. 18: sqrt(sum 4^p d_p) <= sum 2^p d_p for every level (bits of level)."""
+    r = float(decompose.sigma_ratio_theory(jnp.float32(level), 8))
+    assert r <= 1.0 + 1e-6
+    popcount = bin(level).count("1")
+    if popcount >= 2:
+        assert r < 1.0 - 1e-6          # strict when >1 bit set (paper Eq. 17)
+    else:
+        assert abs(r - 1.0) < 1e-6
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(0, 255))
+def test_energy_reads_leq_level(level):
+    """Eq. 19-20: E_new = rho*sum(d_p) <= E_ori = rho*x."""
+    pops = float(decompose.popcount_levels(jnp.float32(level), 8))
+    assert pops <= level + 1e-6
+    assert pops == bin(level).count("1")
+
+
+def test_bitserial_exact_when_no_noise():
+    """sigma -> 0 (rho -> inf): decomposition reproduces the exact product."""
+    dev = DeviceModel()
+    k = jax.random.PRNGKey(0)
+    xq = jnp.round(jax.random.uniform(k, (16, 32), minval=-127, maxval=127))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+    y = decompose.bitserial_matmul_ref(xq, w, 1e9, dev, 7, seed=0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(xq @ w),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bitserial_lower_std_monte_carlo():
+    """Empirical sigma(O_new) < sigma(O_ori) over independent fluctuation draws."""
+    dev = DeviceModel()
+    k = jax.random.PRNGKey(0)
+    # levels with many bits set -> strong decomposition advantage
+    xq = jnp.full((4, 64), 127.0)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    rho = 1.0
+
+    outs_new, outs_ori = [], []
+    from repro.core import hashrng
+    sig = dev.sigma_rel(rho)
+    for s in range(48):
+        outs_new.append(decompose.bitserial_matmul_ref(
+            xq, w, rho, dev, 7, seed=s, base_plane=0))
+        offs = hashrng.tile_state_offsets(s, 0, 0, w.shape, dev.state_offsets,
+                                          dev.state_probs, plane=12345)
+        wn = w * (1 + offs * sig)
+        outs_ori.append(xq @ wn)
+    std_new = float(jnp.std(jnp.stack(outs_new), axis=0).mean())
+    std_ori = float(jnp.std(jnp.stack(outs_ori), axis=0).mean())
+    # levels=127 (7 bits): theory ratio = sqrt(sum 4^p)/sum 2^p ~= 0.743
+    assert std_new < std_ori * 0.85
+    theory = float(decompose.sigma_ratio_theory(jnp.float32(127), 7))
+    assert abs(std_new / std_ori - theory) < 0.12
+
+
+def test_gradient_is_ideal_matmul_vjp():
+    dev = DeviceModel()
+    xq = jnp.round(jax.random.uniform(jax.random.PRNGKey(2), (8, 16),
+                                      minval=-31, maxval=31))
+    w = jax.random.normal(jax.random.PRNGKey(3), (16, 4))
+
+    def f(w):
+        return jnp.sum(decompose.bitserial_matmul_ref(xq, w, 4.0, dev, 5))
+
+    g = jax.grad(f)(w)
+    expected = xq.T @ jnp.ones((8, 4))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expected), rtol=1e-5)

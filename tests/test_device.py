@@ -1,0 +1,51 @@
+"""Device-model unit tests: RTN state normalization, sigma(rho), energy."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.device import DeviceModel, four_state_device, INTENSITY_SCALE
+
+
+def test_states_unbiased_unit_variance():
+    for dev in [DeviceModel(), four_state_device(),
+                DeviceModel(state_offsets=(-3.0, 1.0), state_probs=(0.2, 0.8))]:
+        a = np.asarray(dev.state_offsets)
+        p = np.asarray(dev.state_probs)
+        assert abs((p * a).sum()) < 1e-9          # unbiased reads
+        assert abs((p * a * a).sum() - 1.0) < 1e-9  # unit relative variance
+        assert abs(p.sum() - 1.0) < 1e-9
+
+
+def test_sigma_decreases_with_rho():
+    dev = DeviceModel()
+    rhos = jnp.array([0.5, 1.0, 4.0, 16.0, 64.0])
+    sig = dev.sigma_rel(rhos)
+    assert bool(jnp.all(jnp.diff(sig) < 0))       # higher rho -> less fluctuation
+
+
+def test_intensity_ordering():
+    sigs = [DeviceModel(intensity=i).sigma_rel(4.0)
+            for i in ("weak", "normal", "strong")]
+    assert sigs[0] < sigs[1] < sigs[2]
+
+
+def test_energy_proportional_to_rho_and_weight():
+    dev = DeviceModel()
+    e1 = dev.mac_energy(1.0, 100.0, 0.5, 10)
+    e2 = dev.mac_energy(2.0, 100.0, 0.5, 10)
+    e3 = dev.mac_energy(1.0, 200.0, 0.5, 10)
+    assert np.isclose(e2, 2 * e1) and np.isclose(e3, 2 * e1)
+
+
+def test_peripheral_energy_positive():
+    dev = DeviceModel()
+    assert dev.peripheral_energy(100) > 0
+
+
+def test_read_value_two_state():
+    dev = DeviceModel()
+    lo = dev.read_value(1.0, 4.0, -1.0)
+    hi = dev.read_value(1.0, 4.0, +1.0)
+    sig = float(dev.sigma_rel(4.0))
+    assert np.isclose(hi - lo, 2 * sig, rtol=1e-6)
+    assert np.isclose((hi + lo) / 2, 1.0, rtol=1e-6)

@@ -1,0 +1,121 @@
+"""Multi-device correctness (subprocess with 8 forced host devices).
+
+Checks: sharded train step == unsharded reference; decode on a sharded cache;
+elastic checkpoint restore across meshes; compressed pod psum correctness.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.models.context import Ctx
+from repro.nn.param import init_params, param_shardings, abstract_params
+from repro.parallel.sharding import RULES, batch_shardings, cache_shardings
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import TrainConfig, make_train_step, init_state, \
+    make_state_shardings
+from repro.serve.engine import make_decode_step
+
+out = {}
+mesh = make_mesh(2, 4)
+rules = RULES["train_fsdp_tp"]
+cfg = get_config("gemma2-9b", emt_mode="analog", smoke=True)
+cfg = cfg.replace(dtype=jnp.float32, num_layers=2)
+tcfg = TrainConfig(lam=1e-7, opt=OptimizerConfig(name="adamw"))
+
+# --- sharded vs single-device train step -------------------------------
+step_sh, opt = make_train_step(cfg, tcfg, mesh, rules)
+step_ref, _ = make_train_step(cfg, tcfg, None, None)
+state = init_state(cfg, opt, jax.random.PRNGKey(0))
+data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, batch_size=8)
+batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+with mesh:
+    sh, astate = make_state_shardings(cfg, opt, mesh, rules)
+    state_sh = jax.device_put(state, sh)
+    bsh = batch_shardings(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch), mesh, rules)
+    batch_put = jax.device_put(batch, bsh)
+    new_sh, m_sh = jax.jit(step_sh, in_shardings=(sh, bsh),
+                           out_shardings=(sh, None))(state_sh, batch_put)
+new_ref, m_ref = jax.jit(step_ref)(state, batch)
+out["loss_sharded"] = float(m_sh["loss"])
+out["loss_ref"] = float(m_ref["loss"])
+pdiff = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(new_sh["params"]),
+                            jax.tree.leaves(new_ref["params"])))
+out["param_maxdiff"] = pdiff
+
+# --- decode on sharded cache -------------------------------------------
+srules = RULES["serve_2d"]
+with mesh:
+    psh = param_shardings(lm.specs(cfg), mesh, srules)
+    params_put = jax.device_put(new_ref["params"], psh)
+    cache = lm.init_cache(cfg, 8, 32)
+    csh = cache_shardings(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache), mesh, srules)
+    cache_put = jax.device_put(cache, csh)
+    dstep = jax.jit(make_decode_step(cfg, mesh, srules),
+                    in_shardings=(psh, csh, None, None, None),
+                    out_shardings=(None, csh, None))
+    toks = jnp.zeros((8,), jnp.int32)
+    logits, cache_put, e = dstep(params_put, cache_put, toks,
+                                 jnp.int32(0), jnp.uint32(0))
+ref_logits, _, _ = lm.decode_step(new_ref["params"], cache, toks, 0, cfg,
+                                  Ctx(seed=jnp.uint32(0)))
+out["decode_maxdiff"] = float(jnp.max(jnp.abs(logits - ref_logits)))
+
+# --- elastic checkpoint restore ----------------------------------------
+from repro.ckpt.checkpoint import CheckpointManager
+import tempfile
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(d, async_save=False)
+    mgr.save(1, new_sh)                      # saved from the sharded mesh
+    restored, _ = mgr.restore(1, new_ref)    # restored to single device
+    rdiff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(restored["params"]),
+                                jax.tree.leaves(new_sh["params"])))
+    out["ckpt_reshard_maxdiff"] = rdiff
+
+# --- compressed psum: error feedback bounds the error -------------------
+from repro.parallel.collectives import _quantize_int8
+x = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+q, s = _quantize_int8(x)
+err = jnp.max(jnp.abs(q.astype(jnp.float32) * s - x))
+out["int8_quant_err"] = float(err)
+out["int8_scale"] = float(s)
+
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    # sharded step reproduces the single-device step bitwise-ish
+    assert abs(out["loss_sharded"] - out["loss_ref"]) < 1e-4
+    assert out["param_maxdiff"] < 2e-4
+    assert out["decode_maxdiff"] < 2e-3
+    assert out["ckpt_reshard_maxdiff"] < 1e-6
+    assert out["int8_quant_err"] <= out["int8_scale"] * 0.51

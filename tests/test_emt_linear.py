@@ -1,0 +1,92 @@
+"""EMT dense layer: modes, accounting, technique-B gradients, energy ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EMTConfig, emt_dense, dense_specs, QuantConfig
+from repro.core.emt_linear import add_aux, new_aux
+from repro.core.regularizer import rho_from_raw, rho_init_raw
+from repro.nn.param import init_params
+
+X = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 64))
+
+
+def _layer(mode, **kw):
+    cfg = EMTConfig(mode=mode, **kw)
+    specs = dense_specs(64, 32, cfg, bias=True)
+    return cfg, init_params(specs, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("mode", ["ideal", "analog", "bitserial"])
+def test_modes_finite_and_shaped(mode):
+    cfg, params = _layer(mode)
+    y, aux = emt_dense(params, X, cfg, tag="t", seed=3)
+    assert y.shape == (4, 16, 32)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    if mode != "ideal":
+        assert aux["cells"] == 64 * 32
+        assert float(aux["energy_pj"]) > 0
+
+
+def test_analog_converges_to_ideal_at_high_rho():
+    cfg, params = _layer("analog", rho_init=1e9)
+    y, _ = emt_dense(params, X, cfg, tag="t", seed=3)
+    y_ideal = X @ params["w"] + params["b"]
+    rel = float(jnp.linalg.norm(y - y_ideal) / jnp.linalg.norm(y_ideal))
+    assert rel < 0.03      # residual is 8-bit quantization only
+
+
+def test_noise_decreases_with_rho():
+    errs = []
+    for rho in (0.5, 4.0, 64.0):
+        cfg, params = _layer("analog", rho_init=rho,
+                             quant=QuantConfig(enabled=False))
+        y, _ = emt_dense(params, X, cfg, tag="t", seed=3)
+        errs.append(float(jnp.linalg.norm(y - (X @ params["w"] + params["b"]))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_bitserial_energy_below_analog():
+    cfg_a, params = _layer("analog")
+    cfg_b = EMTConfig(mode="bitserial")
+    _, aux_a = emt_dense(params, X, cfg_a, tag="t", seed=3)
+    _, aux_b = emt_dense(params, X, cfg_b, tag="t", seed=3)
+    assert float(aux_b["energy_pj"]) < float(aux_a["energy_pj"])   # Eq. 20
+
+
+def test_reg_term_gradients_reduce_rho_and_weights():
+    """Fig. 7: descending lam*reg shrinks both rho and sum|w|."""
+    cfg, params = _layer("analog")
+
+    def reg_loss(p):
+        _, aux = emt_dense(p, X, cfg, tag="t", seed=3)
+        return aux["reg"]
+
+    g = jax.grad(reg_loss)(params)
+    assert float(g["rho_raw"]) > 0                   # pushes rho down
+    # weight gradient has the sign of w (|w| subgradient)
+    mask = jnp.abs(params["w"]) > 1e-3
+    agree = jnp.mean((jnp.sign(g["w"]) == jnp.sign(params["w"]))[mask])
+    assert float(agree) > 0.99
+
+
+def test_energy_accounting_off():
+    cfg = EMTConfig(mode="analog", energy_accounting="off")
+    specs = dense_specs(64, 32, cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    y, aux = emt_dense(params, X, cfg, tag="t", seed=1)
+    assert float(aux["energy_pj"]) == 0.0
+    assert aux["cells"] == 64 * 32
+
+
+def test_rho_raw_roundtrip():
+    for rho in (0.01, 1.0, 4.0, 100.0):
+        assert abs(float(rho_from_raw(jnp.float32(rho_init_raw(rho)))) - rho) \
+            < 1e-3 * rho + 1e-5
+
+
+def test_aux_merge():
+    a, b = new_aux(), new_aux()
+    a["cells"], b["cells"] = 3, 4
+    assert add_aux(a, b)["cells"] == 7

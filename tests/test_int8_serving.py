@@ -1,0 +1,48 @@
+"""Beyond-paper int8 weight-streaming serving mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EMTConfig, emt_dense, dense_specs
+from repro.core.emt_linear import quantize_tree_for_serving
+from repro.nn.param import init_params, abstract_params
+from repro.utils import tree_size_bytes
+
+
+def test_int8_specs_halve_weight_bytes():
+    f = EMTConfig(mode="analog")
+    q = EMTConfig(mode="analog", store_int8=True)
+    sf = abstract_params(dense_specs(256, 512, f, dtype=jnp.bfloat16))
+    sq = abstract_params(dense_specs(256, 512, q, dtype=jnp.bfloat16))
+    assert tree_size_bytes(sq) < tree_size_bytes(sf) * 0.55
+
+
+def test_int8_matches_float_path():
+    cfg_f = EMTConfig(mode="analog", rho_init=1e6)      # negligible noise
+    cfg_q = EMTConfig(mode="analog", rho_init=1e6, store_int8=True)
+    params = init_params(dense_specs(64, 32, cfg_f), jax.random.PRNGKey(0))
+    params_q = quantize_tree_for_serving(params)
+    assert "w_int8" in params_q and params_q["w_int8"].dtype == jnp.int8
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    y_f, _ = emt_dense(params, x, cfg_f, tag="t", seed=0)
+    y_q, _ = emt_dense(params_q, x, cfg_q, tag="t", seed=0)
+    rel = float(jnp.linalg.norm(y_f - y_q) / jnp.linalg.norm(y_f))
+    assert rel < 0.02, rel          # int8 quantization error only
+
+
+def test_int8_with_noise_finite():
+    cfg_q = EMTConfig(mode="analog", rho_init=2.0, store_int8=True)
+    params = init_params(dense_specs(64, 32, cfg_q), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    y, aux = emt_dense(params, x, cfg_q, tag="t", seed=3)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert aux["cells"] == 64 * 32
+
+
+def test_quantize_tree_nested():
+    cfg = EMTConfig(mode="analog")
+    tree = {"a": dense_specs(16, 16, cfg), "b": {"c": dense_specs(16, 8, cfg)}}
+    params = init_params(tree, jax.random.PRNGKey(0))
+    q = quantize_tree_for_serving(params)
+    assert "w_int8" in q["a"] and "w_int8" in q["b"]["c"]
+    assert "rho_raw" in q["a"]

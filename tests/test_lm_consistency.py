@@ -1,0 +1,60 @@
+"""Train-forward vs prefill+decode logits consistency (ideal mode, no noise)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.emt_linear import IDEAL
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.nn.param import init_params
+
+CTX = Ctx()
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=3, d_model=48,
+                num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=128,
+                head_dim=12, dtype=jnp.float32, emt=IDEAL, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("kw", [
+    {},
+    {"layer_pattern": ("local", "global"), "sliding_window": 4,
+     "attn_softcap": 30.0, "final_softcap": 20.0},
+    {"layer_pattern": ("mamba", "attn")},
+    {"layer_pattern": ("mlstm", "slstm"), "d_ff": 0},
+])
+def test_prefill_decode_matches_full_forward(kw):
+    cfg = _cfg(**kw)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    # full forward logits at every position (training path, labels unused)
+    from repro.models import common, stack as stk
+    x = common.embed(params["embed"], toks, cfg.embed_scale, cfg.d_model)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    masks = {"global": common.causal_mask(pos, pos),
+             "local": common.causal_mask(pos, pos, cfg.sliding_window)}
+    h, _, _ = stk.apply_stack(params["decoder"], x.astype(cfg.dtype), cfg,
+                              cfg.blocks(), cfg.moe_layer_mask(), ctx=CTX,
+                              tag="dec", positions=pos, mask=masks)
+    h = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits_full, _ = lm._logits(params, h, cfg, CTX)
+
+    # prefill on the first S-1 tokens, then decode token S-1
+    cache = lm.init_cache(cfg, B, S + 1)
+    cache, logits_prefill, _ = lm.prefill(
+        params, {"tokens": toks[:, :S - 1]}, cfg, CTX, cache)
+    np.testing.assert_allclose(np.asarray(logits_prefill),
+                               np.asarray(logits_full[:, S - 2]),
+                               rtol=2e-3, atol=2e-3)
+    logits_dec, cache, _ = lm.decode_step(params, cache, toks[:, S - 1], S - 1,
+                                          cfg, CTX)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, S - 1]),
+                               rtol=2e-3, atol=2e-3)

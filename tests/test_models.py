@@ -1,0 +1,105 @@
+"""Model-block correctness: attention variants, rope, masks, chunked==full."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.emt_linear import IDEAL
+from repro.models import common
+from repro.models.attention import _gqa_core
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+
+CTX = Ctx()
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=64, head_dim=16,
+                dtype=jnp.float32, emt=IDEAL)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = common.apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # dot products depend only on relative distance
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    qb = jnp.broadcast_to(q, (1, 8, 1, 16))
+    yq = common.apply_rope(qb, pos[:1])
+    d1 = float(jnp.sum(yq[0, 2] * yq[0, 4]))
+    d2 = float(jnp.sum(yq[0, 3] * yq[0, 5]))
+    assert abs(d1 - d2) < 1e-4
+
+
+def test_mrope_equals_rope_for_text():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    p3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    y1 = common.apply_rope(x, pos)
+    y2 = common.apply_mrope(x, p3, (2, 3, 3))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = common.softcap(x, 50.0)
+    assert float(jnp.max(jnp.abs(y))) <= 50.0
+    np.testing.assert_allclose(np.asarray(common.softcap(x, 0.0)),
+                               np.asarray(x))
+
+
+def test_causal_and_window_masks():
+    pos = jnp.arange(6)[None]
+    m = common.causal_mask(pos, pos)[0, 0]
+    assert float(m[2, 3]) < -1e29 and float(m[3, 2]) == 0.0
+    mw = common.causal_mask(pos, pos, window=2)[0, 0]
+    assert float(mw[4, 2]) < -1e29          # too far back
+    assert float(mw[4, 3]) == 0.0
+
+
+def test_chunked_attention_matches_full():
+    cfg_full = _cfg(attn_chunk=0)
+    cfg_chunk = _cfg(attn_chunk=4)
+    B, Sq, H, hd = 2, 12, 4, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, Sq, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, 2, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Sq, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    mask = common.causal_mask(pos, pos)
+    y_full = _gqa_core(q, k, v, mask, cfg_full, CTX)
+    y_chunk = _gqa_core(q, k, v, mask, cfg_chunk, CTX)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_chunk),
+                               rtol=1e-5, atol=1e-5)
+    # with softcap too
+    cfg_full = _cfg(attn_chunk=0, attn_softcap=20.0)
+    cfg_chunk = _cfg(attn_chunk=4, attn_softcap=20.0)
+    y_full = _gqa_core(q, k, v, mask, cfg_full, CTX)
+    y_chunk = _gqa_core(q, k, v, mask, cfg_chunk, CTX)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_chunk),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_equals_mha_when_kv_repeated():
+    """GQA with KV=H and duplicated heads == plain MHA math."""
+    cfg = _cfg(num_kv_heads=4)
+    B, S, H, hd = 1, 6, 4, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mask = common.causal_mask(pos, pos)
+    y = _gqa_core(q, k, v, mask, cfg, CTX).reshape(B, S, H, hd)
+    # manual per-head attention
+    for h in range(H):
+        s = (q[:, :, h] @ k[:, :, h].transpose(0, 2, 1)) / np.sqrt(hd)
+        s = s + mask[:, 0]
+        p = jax.nn.softmax(s, -1)
+        ref = p @ v[:, :, h]
+        np.testing.assert_allclose(np.asarray(y[:, :, h]), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)

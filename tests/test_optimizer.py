@@ -1,0 +1,65 @@
+"""Optimizers: convergence on a quadratic, factored shapes, clipping, schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import (Optimizer, OptimizerConfig,
+                                   clip_by_global_norm, cosine_schedule)
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 1.0), ("adamw", 0.1),
+                                     ("adafactor", 0.05)])
+def test_minimizes_quadratic(name, lr):
+    opt = Optimizer(OptimizerConfig(name=name))
+    target = jnp.linspace(-1, 1, 256).reshape(16, 16)
+    params = {"w": jnp.zeros((16, 16))}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    for step in range(500):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, lr,
+                                   jnp.int32(step))
+    assert float(loss(params)) < 1e-2, name
+
+
+def test_adafactor_factored_state_shapes():
+    opt = Optimizer(OptimizerConfig(name="adafactor", min_dim_factored=8))
+    params = {"big": jnp.zeros((128, 64)), "small": jnp.zeros((4,)),
+              "stack": jnp.zeros((3, 32, 16))}
+    st = opt.init(params)
+    assert st["big"]["vr"].shape == (128,)
+    assert st["big"]["vc"].shape == (64,)
+    assert st["small"]["v"].shape == (4,)
+    assert st["stack"]["vr"].shape == (3, 32)
+    assert st["stack"]["vc"].shape == (3, 16)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), np.sqrt(10 * 9 + 10 * 16))
+    cn = float(jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped))))
+    assert np.isclose(cn, 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=110)
+    # warmup starts at base/warmup (step 0 must not be a zero-update step)
+    assert np.isclose(float(lr(jnp.int32(0))), 0.1)
+    assert np.isclose(float(lr(jnp.int32(9))), 1.0)
+    assert float(lr(jnp.int32(110))) <= 0.11
+    assert float(lr(jnp.int32(60))) < float(lr(jnp.int32(20)))
+
+
+def test_bf16_params_fp32_updates():
+    opt = Optimizer(OptimizerConfig(name="adamw"))
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    state = opt.init(params)
+    g = {"w": jnp.full((8, 8), 0.1, jnp.bfloat16)}
+    new_p, _ = opt.update(g, state, params, 0.01, jnp.int32(0))
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert float(new_p["w"][0, 0]) < 1.0

@@ -1,0 +1,45 @@
+"""Fake-quant STE: error bounds, gradients, integer levels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import fake_quant, quant_levels, symmetric_scale
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_quant_error_bounded(bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    xq, scale = fake_quant(x, bits)
+    assert float(jnp.max(jnp.abs(xq - x))) <= float(scale) / 2 + 1e-6
+
+
+def test_ste_gradient_identity():
+    x = jnp.linspace(-1, 1, 101)
+
+    def f(x):
+        xq, _ = fake_quant(x, 8)
+        return jnp.sum(xq)
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0, rtol=1e-6)
+
+
+def test_levels_are_integers_in_range():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 3
+    q, scale = quant_levels(x, 8)
+    q = np.asarray(q)
+    assert np.allclose(q, np.round(q), atol=1e-5)
+    assert np.abs(q).max() <= 127
+    # dequantized matches fake_quant
+    xq, _ = fake_quant(x, 8)
+    np.testing.assert_allclose(np.asarray(q) * float(scale), np.asarray(xq),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_per_channel_scales():
+    x = jnp.stack([jnp.ones(16) * 0.1, jnp.ones(16) * 10.0])
+    s = symmetric_scale(x, 8, axis=(1,))
+    assert s.shape == (2, 1)
+    assert float(s[1, 0]) / float(s[0, 0]) > 50

@@ -1,0 +1,130 @@
+"""Sequence mixers: parallel/chunked forms vs step-by-step recurrence.
+
+The strongest invariant in the repo: full-sequence mixing and token-by-token
+decoding with carried state must agree (mamba, mLSTM, sLSTM) — this is what makes
+long_500k decode correct.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.emt_linear import IDEAL
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.models import mamba as mam
+from repro.models import xlstm as xl
+from repro.nn.param import init_params
+
+CTX = Ctx()
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="ssm", num_layers=1, d_model=32, num_heads=2,
+                num_kv_heads=2, d_ff=0, vocab_size=64, head_dim=16,
+                dtype=jnp.float32, emt=IDEAL)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_selective_scan_matches_lax_scan():
+    B, S, DI, N = 2, 16, 8, 4
+    dA = jax.random.uniform(jax.random.PRNGKey(0), (B, S, DI, N),
+                            minval=0.1, maxval=0.95)
+    dBx = jax.random.normal(jax.random.PRNGKey(1), (B, S, DI, N))
+    h_all, h_last = mam._selective_scan(dA, dBx, chunk=5)
+
+    def step(h, t):
+        h = dA[:, t] * h + dBx[:, t]
+        return h, h
+    _, hs = jax.lax.scan(step, jnp.zeros((B, DI, N)), jnp.arange(S))
+    ref = jnp.moveaxis(hs, 0, 1)
+    np.testing.assert_allclose(np.asarray(h_all), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(ref[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mamba_prefill_decode_consistency():
+    cfg = _cfg()
+    params = init_params(mam.mamba_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_full, _, st_full = mam.mamba(params, x, cfg, ctx=CTX, tag="m")
+    # token-by-token with carried state
+    state = {"h": jnp.zeros((B, cfg.d_inner, cfg.ssm_state)),
+             "conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner))}
+    ys = []
+    for t in range(S):
+        y, _, state = mam.mamba(params, x[:, t:t + 1], cfg, ctx=CTX, tag="m",
+                                state=state)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_full["h"]), np.asarray(state["h"]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_prefill_decode_consistency():
+    cfg = _cfg()
+    params = init_params(xl.mlstm_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 9
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_full, _, st = xl.mlstm(params, x, cfg, ctx=CTX, tag="x")
+    H, DI = cfg.num_heads, 2 * cfg.d_model
+    hd = DI // H
+    state = {"C": jnp.zeros((B, H, hd, hd)), "n": jnp.zeros((B, H, hd)),
+             "conv": jnp.zeros((B, 3, DI))}
+    ys = []
+    for t in range(S):
+        y, _, state = xl.mlstm(params, x[:, t:t + 1], cfg, ctx=CTX, tag="x",
+                               state=state)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st["C"]), np.asarray(state["C"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_chunking_invariance():
+    cfg = _cfg()
+    params = init_params(xl.mlstm_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, cfg.d_model)) * 0.5
+    import repro.models.xlstm as xmod
+    old = xmod.MLSTM_CHUNK
+    try:
+        xmod.MLSTM_CHUNK = 4
+        y4, _, _ = xl.mlstm(params, x, cfg, ctx=CTX, tag="x")
+        xmod.MLSTM_CHUNK = 12
+        y12, _, _ = xl.mlstm(params, x, cfg, ctx=CTX, tag="x")
+    finally:
+        xmod.MLSTM_CHUNK = old
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y12), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_slstm_prefill_decode_consistency():
+    cfg = _cfg()
+    params = init_params(xl.slstm_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_full, _, st = xl.slstm(params, x, cfg, ctx=CTX, tag="s")
+    state = {"c": jnp.zeros((B, cfg.d_model)), "n": jnp.zeros((B, cfg.d_model))}
+    ys = []
+    for t in range(S):
+        y, _, state = xl.slstm(params, x[:, t:t + 1], cfg, ctx=CTX, tag="s",
+                               state=state)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_recurrent_variant_runs():
+    cfg = _cfg(slstm_recurrent=True)
+    params = init_params(xl.slstm_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, cfg.d_model))
+    y, _, _ = xl.slstm(params, x, cfg, ctx=CTX, tag="s")
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))

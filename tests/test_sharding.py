@@ -1,0 +1,74 @@
+"""Sharding rules: dim-aware pspec construction (single-device mesh; the
+multi-device behaviour is covered by tests/test_distributed.py)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.nn.param import logical_to_pspec, ParamSpec, param_shardings
+from repro.parallel.sharding import RULES
+
+
+class FakeMesh:
+    """Duck-typed mesh: just axis names + sizes (pspec math is pure)."""
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.devices = np.zeros(tuple(sizes.values()))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+R = RULES["train_fsdp_tp"]
+
+
+def test_basic_mapping():
+    spec = logical_to_pspec(("embed", "mlp"), R, MESH, (4096, 14336))
+    assert spec == P("data", "model")
+
+
+def test_non_divisible_axis_dropped():
+    # 1-kv-head cache dim cannot shard 16 ways
+    spec = logical_to_pspec(("batch", "seq", "kv_heads", None), R, MESH,
+                            (128, 4096, 1, 128))
+    assert spec[2] is None
+    # but 8 kv heads can't shard 16-way either
+    spec = logical_to_pspec(("batch", "seq", "kv_heads", None), R, MESH,
+                            (128, 4096, 8, 128))
+    assert spec[2] is None
+
+
+def test_axis_used_once():
+    # expert takes model first; mlp then falls back to replication
+    spec = logical_to_pspec(("expert", "embed", "mlp"), R, MESH,
+                            (16, 4096, 8192))
+    assert spec == P("model", "data", None)
+
+
+def test_multi_axis_batch_multipod():
+    spec = logical_to_pspec(("batch", "seq"), R, MESH3, (256, 4096))
+    assert spec[0] == ("pod", "data")
+
+
+def test_multi_axis_partial_when_not_divisible():
+    # batch 16 divides pod(2)*? -> pod*data=32 doesn't divide 16; picks pod only
+    spec = logical_to_pspec(("batch",), R, MESH3, (16,))
+    assert spec == P(("pod",)) or spec == P("pod")
+
+
+def test_param_shardings_tree():
+    mesh = FakeMesh({"data": 2, "model": 2})
+    specs = {"w": ParamSpec((64, 128), axes=("embed", "mlp")),
+             "b": ParamSpec((128,), axes=("mlp",))}
+    # NamedSharding requires a real Mesh; use a 1-device mesh and check specs
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    real = Mesh(devs, ("data", "model"))
+    sh = param_shardings(specs, real, R)
+    assert sh["w"].spec == P("data", "model")
+    assert sh["b"].spec == P("model")
+
+
+def test_serve_rules_shard_cache_seq():
+    spec = logical_to_pspec(("batch", "seq", "kv_heads", None),
+                            RULES["serve_2d"], MESH, (128, 32768, 8, 128))
+    assert spec[1] == "model"       # seq over model (the 1.4TB-cache fix)
+    assert spec[2] is None

@@ -1,0 +1,45 @@
+"""End-to-end system behaviour: the paper's pipeline on the framework's stack.
+
+Train an EMT-aware model with techniques A+B, deploy with and without C, and
+verify the headline claims: noise-aware training recovers accuracy lost by the
+traditional optimizer, and C cuts deployment energy (Eqs. 18/20, Fig. 9).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.ablation_lib import (run_method, method_config, train_cnn,
+                                     evaluate, _with_rho, _emt)
+from repro.configs.paper_cnn import vgg_small
+
+
+@pytest.mark.slow
+def test_noise_aware_training_recovers_accuracy():
+    """traditional-on-EMT <= A-on-EMT (device-enhanced dataset helps) and the
+    deployment energy of A+B+C is below A+B at similar accuracy."""
+    base = vgg_small()
+    r_trad = run_method(base, "traditional", rho=1.0, eval_rho=1.0, steps=90)
+    r_a = run_method(base, "A", rho=1.0, steps=90)
+    # at strong fluctuation (rho=1) noise-aware training should not be worse
+    assert r_a["acc"] >= r_trad["acc"] - 0.03, (r_a, r_trad)
+
+    r_ab = run_method(base, "A+B", rho=4.0, lam=3e-8, steps=90)
+    r_abc = run_method(base, "A+B+C", rho=4.0, lam=3e-8, steps=90)
+    assert r_abc["energy_uj"] < r_ab["energy_uj"], (r_abc, r_ab)
+    assert r_abc["acc"] >= r_ab["acc"] - 0.1
+
+
+def test_ideal_eval_beats_noisy_eval_for_traditional():
+    """Sanity: the traditional model degrades when deployed on noisy EMT."""
+    base = vgg_small()
+    cfg_ideal = method_config(base, "traditional", rho=4.0)
+    params = train_cnn(cfg_ideal, steps=80)
+    acc_ideal, _ = evaluate(cfg_ideal, params)
+
+    dep = dataclasses.replace(cfg_ideal,
+                              emt=_emt("analog", 0.25, trainable=False))
+    acc_noisy, _ = evaluate(dep, _with_rho(dep, params))
+    assert acc_noisy <= acc_ideal + 0.02
