@@ -1,6 +1,19 @@
-"""Serving launcher — batched generation with EMT analog/bit-serial inference.
+"""Serving launcher — continuous-batching generation with EMT analog/bit-serial
+inference.
 
-    python -m repro.launch.serve --arch gemma3-1b --smoke --mode analog
+    python -m repro.launch.serve --arch gemma3-1b --smoke --mode analog \
+        --requests 8 --stagger 2 --temperature 0.8 --top-k 40
+
+Flags (new continuous-batching engine):
+    --requests N       total requests to serve (queue beyond --batch backfills)
+    --stagger K        submit a new request every K engine steps (0 = all at
+                       once, i.e. lockstep-equivalent arrival)
+    --temperature/--top-k/--top-p   per-request sampling (seeded per request)
+    --eos-id           optional stop token
+    --frozen-noise     freeze EMT fluctuation at the engine seed (default:
+                       fresh fluctuation every decode step)
+
+Reports decode tok/s and per-request EMT energy in uJ/token.
 """
 from __future__ import annotations
 
@@ -13,7 +26,7 @@ import numpy as np
 from repro.configs import ARCHS, get_config
 from repro.models import lm
 from repro.nn.param import init_params
-from repro.serve.engine import ServingEngine, GenRequest
+from repro.serve.engine import ServingEngine, GenRequest, prefill_bucket
 
 
 def main():
@@ -23,29 +36,49 @@ def main():
     ap.add_argument("--mode", default="analog",
                     choices=["ideal", "analog", "bitserial"])
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: --batch)")
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="submit one request every K steps (0 = all upfront)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--frozen-noise", action="store_true")
     args = ap.parse_args()
 
     import jax.numpy as jnp
     cfg = get_config(args.arch, emt_mode=args.mode, smoke=args.smoke)
     cfg = cfg.replace(dtype=jnp.float32)
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    n_req = args.requests or args.batch
     eng = ServingEngine(cfg, params, batch_size=args.batch,
-                        max_len=args.prompt_len + args.max_new)
+                        max_len=prefill_bucket(args.prompt_len) + args.max_new,
+                        seed=args.seed, fresh_noise=not args.frozen_noise)
     rng = np.random.default_rng(0)
     reqs = [GenRequest(prompt=rng.integers(0, cfg.vocab_size,
                                            size=args.prompt_len).astype(np.int32),
-                       max_new=args.max_new)
-            for _ in range(args.batch)]
+                       max_new=args.max_new, temperature=args.temperature,
+                       top_k=args.top_k, top_p=args.top_p, eos_id=args.eos_id,
+                       seed=i)
+            for i in range(n_req)]
+
     t0 = time.time()
-    outs, energy = eng.generate(reqs)
+    results = eng.serve(reqs, stagger=args.stagger)
     dt = time.time() - t0
-    tok_count = sum(len(o) for o in outs)
-    print(f"generated {tok_count} tokens in {dt:.2f}s "
-          f"({tok_count/dt:.1f} tok/s), EMT energy {energy*1e-6:.3f} uJ")
-    for i, o in enumerate(outs[:2]):
-        print(f"  req{i}: {o.tolist()}")
+
+    tok_count = sum(len(r.tokens) for r in results)
+    total_uj = sum(r.energy_pj for r in results) * 1e-6
+    print(f"served {len(results)} requests / {tok_count} tokens in {dt:.2f}s "
+          f"({tok_count/dt:.1f} tok/s), EMT energy {total_uj:.3f} uJ "
+          f"({total_uj/max(tok_count,1):.4f} uJ/token)")
+    for r in results[:4]:
+        per_tok = r.energy_pj * 1e-6 / max(len(r.tokens), 1)
+        print(f"  req{r.rid}: {len(r.tokens)} toks, {per_tok:.4f} uJ/token, "
+              f"{r.done_reason}: {r.tokens[:6].tolist()}")
 
 
 if __name__ == "__main__":

@@ -107,8 +107,13 @@ def _gqa_core(q, k, v, mask, cfg: ModelConfig, ctx: Ctx):
 
 def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
                    tag: str, cache: Optional[dict] = None, cache_index=None,
-                   positions3=None):
+                   positions3=None, active=None):
     """Self-attention. Train/prefill: full-sequence. Decode: one step vs cache.
+
+    `cache_index` is a scalar (lockstep decode: every row at the same position)
+    or a (B,) int vector (continuous batching: each slot at its own position).
+    `active` (B,) bool gates cache writes in the vector path — retired slots'
+    cache regions stay frozen until the scheduler re-prefills them.
 
     Returns (y, aux, new_cache_entries_or_None).
     """
@@ -151,25 +156,50 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             # cache is win-sized. (A windowed dynamic_slice of a seq-sharded
             # full cache was measured strictly WORSE — SPMD all-gathers the
             # cache; see EXPERIMENTS.md §Perf "windowed decode".)
-            slot = jnp.mod(jnp.asarray(cache_index), win)
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-            # slot s holds position p(s) = index - ((index - s) mod win)
             idx = jnp.asarray(cache_index)
-            k_pos = idx - jnp.mod(idx - jnp.arange(win), win)
+            if idx.ndim == 0:
+                slot = jnp.mod(idx, win)
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                # slot s holds position p(s) = index - ((index - s) mod win)
+                k_pos = (idx - jnp.mod(idx - jnp.arange(win), win))[None]
+            else:
+                # per-slot ring write; inactive rows write out-of-bounds and
+                # are dropped, freezing their cache region
+                slot = jnp.mod(idx, win)
+                if active is not None:
+                    slot = jnp.where(active, slot, win)
+                rows = jnp.arange(B)
+                k_cache = cache["k"].at[rows, slot].set(
+                    k[:, 0].astype(cache["k"].dtype), mode="drop")
+                v_cache = cache["v"].at[rows, slot].set(
+                    v[:, 0].astype(cache["v"].dtype), mode="drop")
+                k_pos = idx[:, None] - jnp.mod(
+                    idx[:, None] - jnp.arange(win)[None, :], win)   # (B, win)
             mask = jnp.broadcast_to(
-                jnp.where(k_pos >= 0, 0.0, common.NEG_INF)[None, None, None, :],
+                jnp.where(k_pos >= 0, 0.0, common.NEG_INF)[:, None, None, :],
                 (B, 1, 1, win))
             new_cache = {"k": k_cache, "v": v_cache}
             k, v = k_cache, v_cache
         else:
             # ---- decode, global layer: write at cache_index, attend all -----
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+            idx = jnp.asarray(cache_index)
+            if idx.ndim == 0:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+            else:
+                write_idx = idx
+                if active is not None:
+                    write_idx = jnp.where(active, idx, cache["k"].shape[1])
+                rows = jnp.arange(B)
+                k_cache = cache["k"].at[rows, write_idx].set(
+                    k[:, 0].astype(cache["k"].dtype), mode="drop")
+                v_cache = cache["v"].at[rows, write_idx].set(
+                    v[:, 0].astype(cache["v"].dtype), mode="drop")
             new_cache = {"k": k_cache, "v": v_cache}
             k, v = k_cache, v_cache
 

@@ -207,21 +207,29 @@ def _cache_len(cache):
     return max(lens) if lens else 0
 
 
-def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx):
-    """One decode step: `tokens` (B,) generated at position `index` (scalar).
+def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,
+                active=None):
+    """One decode step: `tokens` (B,) generated at position `index`.
+
+    `index` is either a scalar (lockstep: all rows at the same position) or a
+    (B,) int vector (continuous batching: each slot decodes at its own
+    position inside one jitted step).  `active` (B,) bool marks live slots —
+    inactive rows still flow through the matmuls (SPMD batch) but their cache
+    and recurrent-state rows are left untouched, so a retired slot's region
+    stays frozen until the scheduler prefills a new request into it.
 
     Returns (logits (B, vocab), new_cache, aux).
     """
     B = tokens.shape[0]
-    if cfg.input_kind == "embeds":
-        # modality stubs still decode text tokens
-        x = common.embed(params["embed"], tokens[:, None], cfg.embed_scale,
-                         cfg.d_model)
-    else:
-        x = common.embed(params["embed"], tokens[:, None], cfg.embed_scale,
-                         cfg.d_model)
+    # modality stubs ("embeds" input kind) still decode text tokens
+    x = common.embed(params["embed"], tokens[:, None], cfg.embed_scale,
+                     cfg.d_model)
     x = x.astype(cfg.dtype)
-    pos = jnp.broadcast_to(jnp.asarray(index)[None, None], (B, 1))
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:
+        pos = jnp.broadcast_to(idx[None, None], (B, 1))
+    else:
+        pos = idx[:, None]                                # (B, 1) per-slot
     max_len = _cache_len(cache) or 1
     k_pos = jnp.broadcast_to(jnp.arange(max_len)[None], (B, max_len))
     masks = {"global": common.causal_mask(pos, k_pos),
@@ -230,7 +238,7 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx):
     h, aux, new_caches = stk.apply_stack(
         params["decoder"], x, cfg, cfg.blocks(), cfg.moe_layer_mask(), ctx=ctx,
         tag="dec", positions=pos, mask=masks, caches=cache, cache_index=index,
-        remat=False)
+        remat=False, active=active)
     h = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits, a = _logits(params, h, cfg, ctx)
     aux = add_aux(aux, a)

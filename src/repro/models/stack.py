@@ -82,10 +82,22 @@ def block_state_specs(cfg: ModelConfig, kind: str, batch: int, max_len: int,
     raise ValueError(kind)
 
 
+def _gate_state(new_state, old_state, active):
+    """Freeze state rows of inactive slots (continuous-batching decode)."""
+    if active is None or new_state is None or old_state is None:
+        return new_state
+
+    def sel(n, o):
+        a = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o.astype(n.dtype))
+
+    return jax.tree.map(sel, new_state, old_state)
+
+
 def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
                 tag: str, ctx: Ctx, positions=None, positions3=None, mask=None,
                 cache: Optional[dict] = None, cache_index=None,
-                enc_out=None, enc_mask=None):
+                enc_out=None, enc_mask=None, active=None):
     """One residual block. Returns (y, aux, new_cache_or_None)."""
     aux = new_aux()
     new_cache = {}
@@ -98,7 +110,8 @@ def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
         y, a, kv = self_attention(
             params["attn"], h, cfg.replace(sliding_window=window),
             positions=positions, mask=m, ctx=ctx, tag=f"{tag}/attn",
-            cache=cache, cache_index=cache_index, positions3=positions3)
+            cache=cache, cache_index=cache_index, positions3=positions3,
+            active=active)
         aux = add_aux(aux, a)
         if kv:
             new_cache.update(kv)
@@ -116,18 +129,18 @@ def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
         y, a, st = mamba(params["mamba"], h, cfg, ctx=ctx, tag=f"{tag}/mamba",
                          state=cache)
         aux = add_aux(aux, a)
-        new_cache = st
+        new_cache = _gate_state(st, cache, active)
         x = x + y
     elif kind == "mlstm":
         y, a, st = mlstm(params["mlstm"], h, cfg, ctx=ctx, tag=f"{tag}/mlstm",
                          state=cache)
         aux = add_aux(aux, a)
-        return x + y, aux, st
+        return x + y, aux, _gate_state(st, cache, active)
     elif kind == "slstm":
         y, a, st = slstm(params["slstm"], h, cfg, ctx=ctx, tag=f"{tag}/slstm",
                          state=cache)
         aux = add_aux(aux, a)
-        return x + y, aux, st
+        return x + y, aux, _gate_state(st, cache, active)
     else:
         raise ValueError(kind)
 
@@ -151,7 +164,7 @@ def stack_specs(cfg: ModelConfig, num_layers: int, kinds, moe_mask,
 def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
                 tag: str, positions=None, positions3=None, mask=None,
                 caches: Optional[dict] = None, cache_index=None,
-                enc_out=None, enc_mask=None, remat: bool = False):
+                enc_out=None, enc_mask=None, remat: bool = False, active=None):
     """Apply the whole stack. caches: dict layer_name -> block cache."""
     aux = new_aux()
     new_caches = {}
@@ -165,7 +178,7 @@ def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
                                tag=f"{tag}/{name}", ctx=ctx, positions=positions,
                                positions3=positions3, mask=mask, cache=cache,
                                cache_index=cache_index, enc_out=enc_out,
-                               enc_mask=enc_mask)
+                               enc_mask=enc_mask, active=active)
 
         if remat:
             x, a, upd = jax.checkpoint(

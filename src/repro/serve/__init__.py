@@ -1,2 +1,6 @@
-from repro.serve.engine import (ServingEngine, GenRequest, make_prefill_step,
-                                make_decode_step, serve_shardings)
+from repro.serve.engine import (ServingEngine, GenRequest, GenResult,
+                                make_prefill_step, make_decode_step,
+                                make_serve_decode_step, serve_shardings,
+                                prefill_bucket)
+from repro.serve.scheduler import Scheduler, Slot
+from repro.serve.sampling import sample_tokens

@@ -1,13 +1,50 @@
-"""Serving runtime: sharded prefill/decode steps + a batched generation engine.
+"""Serving runtime: sharded prefill/decode steps + a continuous-batching engine.
 
 ``serve_step`` (decode) is THE artifact the decode_32k / long_500k dry-run cells
 lower: one new token against a seq_len KV cache, with all projections running as
 EMT analog (optionally bit-serial, technique C) crossbar reads.
+
+Architecture (continuous batching)
+----------------------------------
+The engine owns a fixed batch of ``batch_size`` **slots** over one shared KV
+cache of shape ``(batch_size, max_len, ...)`` per attention layer.  Each slot
+is free or bound to exactly one in-flight request:
+
+* **admission** — a FIFO :class:`~repro.serve.scheduler.Scheduler` assigns the
+  queue head to a free slot.  The request's prompt is left-padded into a
+  power-of-two length bucket, prefilled alone (batch 1, compiled once per
+  bucket), and the resulting cache/state rows are scattered into the slot's
+  region of the shared cache.  Admission happens *mid-decode*: other slots keep
+  decoding at their own positions and nothing recompiles, because the decode
+  step's shapes are static in ``batch_size``.
+* **decode** — one jitted step per token for the whole batch.
+  :func:`repro.models.lm.decode_step` takes a per-slot ``(B,)`` position vector
+  plus an active mask, so slots at different sequence positions share the step;
+  retired/free slots flow through the matmuls but their cache rows are frozen.
+* **sampling** — :mod:`repro.serve.sampling` draws each slot's next token from
+  a pure hash of (request seed, generated-token counter): deterministic per
+  request, independent of slot placement and co-tenants.
+* **retirement** — a slot is released on EOS, ``max_new`` tokens, or cache
+  exhaustion (``max_len``), and immediately becomes available for backfill.
+* **energy** — the paper's per-step scalar ``energy_pj`` aux is attributed per
+  request: prefill energy goes to the admitted request; each decode step's
+  energy is split by read counts — every slot (active or idle) issues the same
+  crossbar reads per step, so an active slot is billed ``e/batch_size`` and
+  the idle rows' share accrues to ``idle_energy_pj`` (scheduler waste, not any
+  request's).  Per-request numbers are therefore occupancy-independent, and
+  ``sum(per-request) + idle_energy_pj == total_energy_pj`` by construction.
+
+Weight-noise seeding (technique A): with ``fresh_noise=True`` (default) every
+decode step folds the global step counter into the EMT fluctuation seed — the
+physical RTN picture, matching the pre-continuous-batching engine.  With
+``fresh_noise=False`` the fluctuation is frozen at the engine seed (static
+programming-noise picture), which makes generation a pure function of the
+request — the property the alone-vs-staggered equivalence tests exercise.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +57,8 @@ from repro.models.context import Ctx
 from repro.nn.param import abstract_params, param_shardings
 from repro.parallel.sharding import (RULES, make_shard_fn, batch_shardings,
                                      cache_shardings)
+from repro.serve import sampling
+from repro.serve.scheduler import Scheduler, Slot
 
 
 def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
@@ -33,6 +72,7 @@ def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
 
 
 def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
+    """Lockstep decode step (scalar position) — the dry-run lowering artifact."""
     shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
 
     def decode_step(params, cache, tokens, index, seed):
@@ -41,6 +81,23 @@ def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
         return logits, cache, aux["energy_pj"]
 
     return decode_step
+
+
+def make_serve_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
+    """Continuous-batching decode: per-slot positions/active mask + fused
+    per-slot seeded sampling. Returns (next_tokens, new_cache, energy_pj)."""
+    shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
+
+    def serve_decode_step(params, cache, tokens, index, active, seed,
+                          sample_seeds, sample_pos, temps, top_k, top_p):
+        ctx = Ctx(seed=seed, shard=shard)
+        logits, cache, aux = lm.decode_step(params, cache, tokens, index, cfg,
+                                            ctx, active=active)
+        next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
+                                          sample_seeds, sample_pos)
+        return next_tok, cache, aux["energy_pj"]
+
+    return serve_decode_step
 
 
 def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
@@ -58,49 +115,221 @@ def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
 class GenRequest:
     prompt: np.ndarray               # (S,) int32
     max_new: int = 16
-    temperature: float = 0.0
+    temperature: float = 0.0         # 0 = greedy
+    top_k: int = 0                   # 0 = disabled
+    top_p: float = 1.0               # >=1 = disabled
+    seed: int = 0                    # sampling seed (deterministic per request)
+    eos_id: Optional[int] = None     # stop token (None = run to max_new)
+
+
+@dataclasses.dataclass
+class GenResult:
+    rid: int                         # request id, submission order
+    tokens: np.ndarray               # (n,) int32 generated tokens
+    energy_pj: float                 # total EMT energy billed to this request
+    prefill_energy_pj: float         # ... of which prefill
+    steps: int                       # decode steps the request participated in
+    done_reason: str                 # "eos" | "max_new" | "max_len"
+
+
+def prefill_bucket(n: int, lo: int = 4) -> int:
+    """Smallest power-of-two >= n (min `lo`) — prefill compile-cache buckets.
+
+    Sizing note for callers: a request's prompt occupies ``prefill_bucket(len)``
+    cache positions (left-padded), so an engine serving prompts of length L for
+    ``max_new`` tokens wants ``max_len >= prefill_bucket(L) + max_new - 1``."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class ServingEngine:
-    """Minimal batched engine: pads requests to a fixed batch, prefills once,
-    then decodes greedily step by step (single host; the sharded steps are the
-    same functions the multi-pod dry-run compiles)."""
+    """Slot-based continuous-batching engine (single host; the sharded steps
+    are the same functions the multi-pod dry-run compiles).
+
+    Streaming API: ``submit()`` enqueues a request and returns its rid,
+    ``step()`` advances the whole batch one token (admitting queued requests
+    into free slots first) and returns any finished :class:`GenResult`s,
+    ``drain()`` steps until idle.  ``generate()`` is the batch-mode wrapper.
+    """
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int, max_len: int,
-                 mesh: Optional[Mesh] = None, rules=None, seed: int = 0):
+                 mesh: Optional[Mesh] = None, rules=None, seed: int = 0,
+                 fresh_noise: bool = True):
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self.seed = seed
+        self.fresh_noise = fresh_noise
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
-        self._decode = jax.jit(make_decode_step(cfg, mesh, rules),
+        self._decode = jax.jit(make_serve_decode_step(cfg, mesh, rules),
                                donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+        self._sample = jax.jit(sampling.sample_tokens)
+        self.scheduler = Scheduler(batch_size)
+        self.cache = lm.init_cache(cfg, batch_size, max_len)
+        self.total_energy_pj = 0.0
+        self.idle_energy_pj = 0.0    # decode energy of idle slots (waste)
+        self._steps = 0              # global decode-step counter (noise clock)
 
-    def generate(self, requests):
-        assert len(requests) <= self.batch_size
+    # -- jitted helpers ------------------------------------------------------
+    @staticmethod
+    def _insert_slot(big, small, slot):
+        """Scatter a freshly prefilled batch-1 cache into slot `slot`."""
+        return jax.tree.map(lambda b, s: b.at[slot].set(s[0].astype(b.dtype)),
+                            big, small)
+
+    # -- streaming API -------------------------------------------------------
+    def submit(self, req: GenRequest) -> int:
+        """Enqueue a request; returns its rid. Admission happens in step()."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        assert 1 <= len(prompt) <= self.max_len, \
+            f"prompt length {len(prompt)} vs max_len {self.max_len}"
+        assert req.max_new >= 1, f"max_new must be >= 1, got {req.max_new}"
+        return self.scheduler.submit(req)
+
+    def step(self) -> List[GenResult]:
+        """Admit queued requests into free slots, then decode one token for
+        every active slot. Returns requests finished this step."""
+        finished = []
+        while self.scheduler.pending:
+            sid = self.scheduler.free_slot()
+            if sid is None:
+                break
+            rid, req = self.scheduler.pop_pending()
+            self._admit(sid, rid, req)
+            done = self._maybe_retire(sid)
+            if done is not None:
+                finished.append(done)
+
+        active = self.scheduler.active_slots()
+        if not active:
+            return finished
+
         B = self.batch_size
-        S = max(len(r.prompt) for r in requests)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, S - len(r.prompt):] = r.prompt      # left-pad
-        cache = lm.init_cache(self.cfg, B, self.max_len)
+        tokens = np.zeros(B, np.int32)
+        index = np.zeros(B, np.int32)
+        act = np.zeros(B, bool)
+        seeds = np.zeros(B, np.uint32)
+        spos = np.zeros(B, np.int32)
+        temps = np.zeros(B, np.float32)
+        topk = np.zeros(B, np.int32)
+        topp = np.ones(B, np.float32)
+        for i, s in active:
+            tokens[i] = s.last_token
+            index[i] = s.pos
+            act[i] = True
+            seeds[i] = np.uint32(s.req.seed)
+            spos[i] = s.sample_pos
+            temps[i] = s.req.temperature
+            topk[i] = s.req.top_k
+            topp[i] = s.req.top_p
+
+        step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
+        next_tok, self.cache, e = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(index),
+            jnp.asarray(act), jnp.uint32(step_seed), jnp.asarray(seeds),
+            jnp.asarray(spos), jnp.asarray(temps), jnp.asarray(topk),
+            jnp.asarray(topp))
+        self._steps += 1
+        e = float(e)
+        self.total_energy_pj += e
+        # every row issues the same reads per step: bill e/B to each active
+        # slot (occupancy-independent) and book the idle rows' share as waste
+        share = e / B
+        self.idle_energy_pj += share * (B - len(active))
+        next_tok = np.asarray(next_tok)
+        for i, s in active:
+            s.energy_pj += share
+            s.steps += 1
+            s.pos += 1
+            t = int(next_tok[i])
+            s.last_token = t
+            s.generated.append(t)
+            done = self._maybe_retire(i)
+            if done is not None:
+                finished.append(done)
+        return finished
+
+    def drain(self) -> List[GenResult]:
+        """Run step() until queue and slots are empty."""
+        out = []
+        while self.scheduler.busy:
+            out.extend(self.step())
+        return out
+
+    # -- batch-mode wrapper --------------------------------------------------
+    def generate(self, requests):
+        """Submit `requests` together and drain. Returns (token arrays in
+        submission order, EMT energy in pJ billed to these requests). Resets
+        the noise clock so repeated calls are bit-identical."""
+        assert not self.scheduler.busy, "generate() requires an idle engine"
+        self._steps = 0
+        rids = [self.submit(r) for r in requests]
+        res = {r.rid: r for r in self.drain()}
+        outs = [np.asarray(res[rid].tokens) for rid in rids]
+        return outs, float(sum(res[rid].energy_pj for rid in rids))
+
+    def serve(self, requests, stagger: int = 0) -> List[GenResult]:
+        """Streaming driver: submit one request every `stagger` steps
+        (0 = all upfront), then run to completion. Returns results in
+        submission (rid) order."""
+        results = []
+        for r in requests:
+            self.submit(r)
+            for _ in range(max(stagger, 0)):
+                results += self.step()
+        results += self.drain()
+        return sorted(results, key=lambda r: r.rid)
+
+    # -- internals -----------------------------------------------------------
+    def _admit(self, slot_id: int, rid: int, req: GenRequest):
+        """Prefill `req` alone into slot `slot_id` (left-pad into a power-of-two
+        bucket) and sample its first token from the prefill logits."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        S = prefill_bucket(len(prompt))
+        if S >= self.max_len:
+            # bucket would leave no decode room: prefill at exact length
+            # (one extra compile for the rare near-capacity prompt)
+            S = len(prompt)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, S - len(prompt):] = prompt               # left-pad preserved
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.input_kind == "embeds":
-            batch["embeds"] = jnp.zeros((B, S, self.cfg.d_model), jnp.float32)
+            batch["embeds"] = jnp.zeros((1, S, self.cfg.d_model), jnp.float32)
         if self.cfg.is_encdec:
-            batch["enc_embeds"] = jnp.zeros((B, S, self.cfg.d_model), jnp.float32)
-        cache, logits, _ = self._prefill(self.params, batch, cache,
-                                         jnp.uint32(self.seed))
-        max_new = max(r.max_new for r in requests)
-        out = [[] for _ in range(B)]
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        energy = 0.0
-        for t in range(max_new):
-            for i in range(len(requests)):
-                out[i].append(int(tok[i]))
-            logits, cache, e = self._decode(self.params, cache, tok, S + t,
-                                            jnp.uint32(self.seed + t + 1))
-            energy += float(e)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return [np.asarray(o) for o in out[:len(requests)]], energy
+            batch["enc_embeds"] = jnp.zeros((1, S, self.cfg.d_model), jnp.float32)
+        small = lm.init_cache(self.cfg, 1, self.max_len)
+        small, logits, aux = self._prefill(self.params, batch, small,
+                                           jnp.uint32(self.seed))
+        self.cache = self._insert(self.cache, small, jnp.int32(slot_id))
+        prefill_e = float(aux["energy_pj"])
+        self.total_energy_pj += prefill_e
+        tok0 = int(self._sample(
+            logits, jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+            jnp.asarray([req.top_p], jnp.float32),
+            jnp.asarray([req.seed], jnp.uint32),
+            jnp.asarray([0], jnp.int32))[0])
+        self.scheduler.place(slot_id, Slot(
+            rid=rid, req=req, pos=S, last_token=tok0, generated=[tok0],
+            prefill_energy_pj=prefill_e))
+
+    def _maybe_retire(self, slot_id: int) -> Optional[GenResult]:
+        s = self.scheduler.slots[slot_id]
+        if s.req.eos_id is not None and s.generated[-1] == s.req.eos_id:
+            reason = "eos"
+        elif len(s.generated) >= s.req.max_new:
+            reason = "max_new"
+        elif s.pos >= self.max_len:
+            reason = "max_len"           # cache exhausted: truncate
+        else:
+            return None
+        slot = self.scheduler.retire(slot_id)
+        return GenResult(
+            rid=slot.rid, tokens=np.asarray(slot.generated, np.int32),
+            energy_pj=slot.prefill_energy_pj + slot.energy_pj,
+            prefill_energy_pj=slot.prefill_energy_pj, steps=slot.steps,
+            done_reason=reason)

@@ -1,0 +1,86 @@
+"""FIFO slot scheduler for the continuous-batching engine (host-side, pure
+Python — no jax in this module).
+
+The engine owns a fixed batch of ``batch_size`` *slots*; each slot is either
+free or bound to one in-flight request.  Requests enter a FIFO queue via
+:meth:`Scheduler.submit`; the engine admits the queue head whenever a slot is
+free (including mid-decode — backfill never recompiles the decode step because
+the batch shape is static), and retires slots on EOS / ``max_new`` / cache
+exhaustion.  The scheduler only does bookkeeping; prefill and decode stay in
+the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class Slot:
+    """One in-flight request bound to a batch row."""
+    rid: int                        # request id (submission order)
+    req: object                     # the GenRequest
+    pos: int                        # next cache write index (absolute, bucketed)
+    last_token: int                 # most recently sampled token (decode input)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    energy_pj: float = 0.0          # decode-energy share accumulated so far
+    prefill_energy_pj: float = 0.0
+    steps: int = 0                  # decode steps this request participated in
+
+    @property
+    def sample_pos(self) -> int:
+        """Request-relative sampling counter (0 = first/prefill token)."""
+        return len(self.generated)
+
+
+class Scheduler:
+    """FIFO admission queue + slot table."""
+
+    def __init__(self, batch_size: int):
+        self.batch_size = batch_size
+        self.queue: deque = deque()          # (rid, req) awaiting a slot
+        self.slots: List[Optional[Slot]] = [None] * batch_size
+        self._next_rid = 0
+
+    # -- queue ---------------------------------------------------------------
+    def submit(self, req) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append((rid, req))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def pop_pending(self):
+        return self.queue.popleft()
+
+    # -- slots ---------------------------------------------------------------
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def place(self, slot_id: int, slot: Slot) -> None:
+        assert self.slots[slot_id] is None, f"slot {slot_id} occupied"
+        self.slots[slot_id] = slot
+
+    def retire(self, slot_id: int) -> Slot:
+        slot = self.slots[slot_id]
+        assert slot is not None
+        self.slots[slot_id] = None
+        return slot
+
+    def active_slots(self):
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def busy(self) -> bool:
+        return self.num_active > 0 or self.pending > 0

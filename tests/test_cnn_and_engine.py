@@ -29,7 +29,9 @@ def test_cnn_forward_shapes_and_energy():
 def test_cnn_learns_quickly():
     from benchmarks.ablation_lib import train_cnn, evaluate
     cfg = vgg_small()
-    params = train_cnn(cfg, steps=180, batch=32, seed=0)
+    # 180 steps plateaus at ~0.27 on this synthetic task; 300 reaches 1.0
+    # deterministically (seed-fixed data + hash-RNG noise), with margin.
+    params = train_cnn(cfg, steps=300, batch=32, seed=0)
     acc, energy = evaluate(cfg, params, batches=4)
     assert acc > 0.45, acc         # 4 classes, random = 0.25
     assert energy > 0

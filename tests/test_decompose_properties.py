@@ -6,6 +6,9 @@ equality only for 0/1-bit levels; plus Monte-Carlo confirmation on real matmuls.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import decompose
