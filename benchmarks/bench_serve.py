@@ -1,8 +1,9 @@
-"""Serving benchmark: decode tok/s + uJ/token, lockstep-equivalent vs staggered.
+"""Serving benchmark: decode tok/s + uJ/token, lockstep-equivalent vs staggered,
+plus a paged-vs-contiguous KV memory/throughput comparison.
 
     PYTHONPATH=src python benchmarks/bench_serve.py [--out BENCH_serve.json]
 
-Two workloads on a smoke config:
+Three workloads on a smoke config:
 
 * **lockstep** — all requests arrive together with equal prompt lengths (the
   regime the old fixed-batch engine handled): every slot decodes at the same
@@ -10,6 +11,12 @@ Two workloads on a smoke config:
 * **staggered** — requests arrive one every `--stagger` steps with mixed
   prompt lengths: slots decode at different positions and retired slots are
   backfilled mid-decode, which the old engine could not do at all.
+* **paged_vs_contiguous** — a long-context engine (`--paged-max-len`) serving
+  short requests: the contiguous engine strands `max_len - need` positions
+  per slot, the paged engine only holds each request's blocks, so at *less*
+  KV memory it admits >= 2x the concurrent requests (reported as
+  `admissible_concurrent` / `kv_bytes`, plus measured peak occupancy and
+  throughput on the same workload).
 
 Writes a JSON report (tok/s, uJ/token, per-request energy spread) to --out.
 """
@@ -36,8 +43,17 @@ def _requests(rng, vocab, n, max_new, mixed):
             for i, L in enumerate(lens)]
 
 
-def run_workload(cfg, params, reqs, *, batch, max_len, stagger):
-    eng = ServingEngine(cfg, params, batch_size=batch, max_len=max_len)
+def kv_bytes(eng):
+    """Total bytes held by the engine's KV cache arrays (pools incl. the zero
+    block for paged; all slot regions for contiguous)."""
+    leaves = jax.tree.leaves(eng.cache)
+    return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+
+def run_workload(cfg, params, reqs, *, stagger, batch=None, max_len=None,
+                 eng=None):
+    if eng is None:
+        eng = ServingEngine(cfg, params, batch_size=batch, max_len=max_len)
     # warm THIS engine's jit caches (the wrappers are per-engine closures):
     # compile the decode step + every prefill bucket the workload will hit,
     # then reset the counters so the timed run starts clean
@@ -47,6 +63,7 @@ def run_workload(cfg, params, reqs, *, batch, max_len, stagger):
     eng._steps = 0
     eng.total_energy_pj = 0.0
     eng.idle_energy_pj = 0.0
+    eng.peak_concurrent = 0
     t0 = time.time()
     results = eng.serve(reqs, stagger=stagger)
     wall_s = time.time() - t0
@@ -57,6 +74,7 @@ def run_workload(cfg, params, reqs, *, batch, max_len, stagger):
         "requests": len(results),
         "tokens": toks,
         "decode_steps": eng._steps,
+        "peak_concurrent": eng.peak_concurrent,
         "wall_s": round(wall_s, 3),
         "tok_per_s": round(toks / wall_s, 2),
         "total_uj": round(sum(uj), 4),
@@ -67,6 +85,53 @@ def run_workload(cfg, params, reqs, *, batch, max_len, stagger):
     }
 
 
+def run_paged_compare(cfg, params, *, max_len=128, block_size=8, n_requests=16,
+                      max_new=8):
+    """Long-context engine, short requests: equal-or-less KV memory, >= 2x
+    admissible concurrency for the paged block-table cache."""
+    lens = np.random.default_rng(1).integers(4, 10, size=n_requests)
+
+    def mk_reqs():
+        rng = np.random.default_rng(2)
+        return [GenRequest(prompt=rng.integers(0, cfg.vocab_size, size=int(L))
+                           .astype(np.int32), max_new=max_new, seed=i)
+                for i, L in enumerate(lens)]
+
+    cont = ServingEngine(cfg, params, batch_size=4, max_len=max_len)
+    # pools sized for 9 concurrent worst-case requests — still fewer bytes
+    # than the contiguous engine's 4 slots x max_len regions (the sliding
+    # window ring pools scale with concurrency; the global pool holds blocks
+    # for what requests use, not max_len per slot)
+    worst = max(prefill_bucket(int(L)) for L in lens) + max_new - 1
+    gpb = -(-worst // block_size)                 # global blocks per request
+    paged = ServingEngine(cfg, params, batch_size=9, max_len=max_len,
+                          paged=True, block_size=block_size,
+                          num_blocks=9 * gpb, num_ring_blocks=9)
+    ring_per_req = (paged.kv.pool_l.blocks_for(paged.kv.ring_len)
+                    if paged.kv.pool_l else 0)
+    admissible = {
+        "contiguous": cont.batch_size,
+        "paged": min(paged.batch_size,
+                     paged.kv.pool_g.num_blocks // gpb,
+                     (paged.kv.pool_l.num_blocks // ring_per_req
+                      if ring_per_req else paged.batch_size)),
+    }
+    out = {
+        "max_len": max_len, "block_size": block_size,
+        "n_requests": n_requests, "max_new": max_new,
+        "kv_bytes": {"contiguous": kv_bytes(cont), "paged": kv_bytes(paged)},
+        "admissible_concurrent": admissible,
+        "admissible_ratio": round(admissible["paged"] /
+                                  admissible["contiguous"], 2),
+        "contiguous": run_workload(cfg, params, mk_reqs(), stagger=0,
+                                   eng=cont),
+        "paged": run_workload(cfg, params, mk_reqs(), stagger=0, eng=paged),
+    }
+    out["kv_bytes"]["ratio"] = round(out["kv_bytes"]["paged"] /
+                                     out["kv_bytes"]["contiguous"], 3)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
@@ -75,6 +140,8 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--stagger", type=int, default=2)
+    ap.add_argument("--paged-max-len", type=int, default=128,
+                    help="context budget for the paged-vs-contiguous compare")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -94,6 +161,8 @@ def main():
         cfg, params, _requests(rng, cfg.vocab_size, args.requests,
                                args.max_new, mixed=True),
         batch=args.batch, max_len=max_len, stagger=args.stagger)
+    report["paged_vs_contiguous"] = run_paged_compare(
+        cfg, params, max_len=args.paged_max_len)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify suite: the fast tests (everything not marked `slow`), pinned
+# behind the `tier1` marker so the verify command stays stable as slow suites
+# grow. Usage: scripts/run_tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q -m tier1 "$@"

@@ -12,6 +12,12 @@ Flags (new continuous-batching engine):
     --eos-id           optional stop token
     --frozen-noise     freeze EMT fluctuation at the engine seed (default:
                        fresh fluctuation every decode step)
+    --paged            paged block-table KV cache: slots share a block pool
+                       and admission is gated on the free-block budget
+    --block-size N     positions per KV block (paged mode)
+    --kv-blocks N      global-layer pool size in blocks (default: capacity-
+                       equal to the contiguous per-slot regions)
+    --kv-ring-blocks N sliding-window-layer pool size in blocks
 
 Reports decode tok/s and per-request EMT energy in uJ/token.
 """
@@ -48,6 +54,11 @@ def main():
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--frozen-noise", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block-table KV cache")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--kv-blocks", type=int, default=None)
+    ap.add_argument("--kv-ring-blocks", type=int, default=None)
     args = ap.parse_args()
 
     import jax.numpy as jnp
@@ -57,7 +68,10 @@ def main():
     n_req = args.requests or args.batch
     eng = ServingEngine(cfg, params, batch_size=args.batch,
                         max_len=prefill_bucket(args.prompt_len) + args.max_new,
-                        seed=args.seed, fresh_noise=not args.frozen_noise)
+                        seed=args.seed, fresh_noise=not args.frozen_noise,
+                        paged=args.paged, block_size=args.block_size,
+                        num_blocks=args.kv_blocks,
+                        num_ring_blocks=args.kv_ring_blocks)
     rng = np.random.default_rng(0)
     reqs = [GenRequest(prompt=rng.integers(0, cfg.vocab_size,
                                            size=args.prompt_len).astype(np.int32),

@@ -105,15 +105,46 @@ def _gqa_core(q, k, v, mask, cfg: ModelConfig, ctx: Ctx):
     return out.reshape(B, Sq, H * hd).astype(v.dtype)
 
 
+def paged_gather(pool, table, length: int):
+    """Gather a (B, length, ...) logical view out of a block pool.
+
+    `pool` is (num_blocks + 1, block_size, ...) with the zero block last;
+    `table` is (B, T) int32 block ids (unallocated entries -> zero block), so
+    logical position j of row b reads pool[table[b, j // bs], j % bs] — exact
+    zeros wherever nothing was written, bit-identical to a contiguous cache.
+    """
+    bs = pool.shape[1]
+    j = jnp.arange(length)
+    return pool[table[:, j // bs], (j % bs)[None, :]]
+
+
+def _paged_write(pool, table, wpos, val, active):
+    """Scatter one token per row into its block: row b writes
+    pool[table[b, wpos[b] // bs], wpos[b] % bs]. Inactive rows are redirected
+    out of bounds and dropped (their blocks may already be recycled)."""
+    bs = pool.shape[1]
+    blk = jnp.take_along_axis(table, (wpos // bs)[:, None], axis=1)[:, 0]
+    if active is not None:
+        blk = jnp.where(active, blk, pool.shape[0])
+    return pool.at[blk, jnp.mod(wpos, bs)].set(val.astype(pool.dtype),
+                                               mode="drop")
+
+
 def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
                    tag: str, cache: Optional[dict] = None, cache_index=None,
-                   positions3=None, active=None):
+                   positions3=None, active=None, page_table=None,
+                   page_len: int = 0):
     """Self-attention. Train/prefill: full-sequence. Decode: one step vs cache.
 
     `cache_index` is a scalar (lockstep decode: every row at the same position)
     or a (B,) int vector (continuous batching: each slot at its own position).
     `active` (B,) bool gates cache writes in the vector path — retired slots'
     cache regions stay frozen until the scheduler re-prefills them.
+
+    With `page_table` (B, T) int32 + `page_len` the decode cache is paged: the
+    layer's cache entries are block pools and reads/writes go through the
+    block table (`page_len` is the logical per-slot length — max_len for
+    global layers, the window for ring layers).
 
     Returns (y, aux, new_cache_entries_or_None).
     """
@@ -150,6 +181,28 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             new_cache = {"k": k_cache.astype(cache["k"].dtype),
                          "v": v_cache.astype(cache["v"].dtype)}
             # fall through: attend with the prompt-length k, v + caller's mask
+        elif page_table is not None:
+            # ---- decode, paged: write through the block table, gather a
+            # logical (B, page_len) view of the pool, attend as usual ---------
+            idx = jnp.asarray(cache_index)
+            if idx.ndim == 0:                 # lockstep scalar index
+                idx = jnp.broadcast_to(idx, (B,))
+            L = page_len
+            ring_paged = bool(win) and L == win
+            wpos = jnp.mod(idx, L) if ring_paged else idx
+            k_cache = _paged_write(cache["k"], page_table, wpos, k[:, 0], active)
+            v_cache = _paged_write(cache["v"], page_table, wpos, v[:, 0], active)
+            new_cache = {"k": k_cache, "v": v_cache}
+            k = paged_gather(k_cache, page_table, L)
+            v = paged_gather(v_cache, page_table, L)
+            if ring_paged:
+                # same modular position arithmetic as the contiguous ring
+                k_pos = idx[:, None] - jnp.mod(
+                    idx[:, None] - jnp.arange(L)[None, :], L)      # (B, L)
+                mask = jnp.broadcast_to(
+                    jnp.where(k_pos >= 0, 0.0,
+                              common.NEG_INF)[:, None, None, :], (B, 1, 1, L))
+            # else: caller's mask already covers the logical length L
         elif ring:
             # ---- decode, sliding-window layer: ring write + ring attend -----
             # A 32k-cache local layer reads `win` keys, not 32768, and its
@@ -211,15 +264,24 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
 
 
 def cross_attention(params, x, cfg: ModelConfig, *, enc_out=None, enc_mask=None,
-                    ctx: Ctx, tag: str, cache: Optional[dict] = None):
-    """Encoder-decoder cross attention. K/V from `enc_out` (prefill) or `cache`."""
+                    ctx: Ctx, tag: str, cache: Optional[dict] = None,
+                    page_table=None, page_len: int = 0):
+    """Encoder-decoder cross attention. K/V from `enc_out` (prefill) or `cache`.
+
+    With `page_table`/`page_len` the decode read gathers the encoder K/V
+    through the block table (cross K/V is written once at prefill insert and
+    never appended, so the table is read-only here)."""
     aux = new_aux()
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q, a = emt_dense(params["wq"], x, cfg.emt, tag=f"{tag}/wq", seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     q = q.reshape(*x.shape[:-1], H, hd)
     if enc_out is None and cache is not None and "ck" in cache:
-        k, v = cache["ck"], cache["cv"]
+        if page_table is not None:
+            k = paged_gather(cache["ck"], page_table, page_len)
+            v = paged_gather(cache["cv"], page_table, page_len)
+        else:
+            k, v = cache["ck"], cache["cv"]
         new_cache = None
     else:
         k, a = emt_dense(params["wk"], enc_out, cfg.emt, tag=f"{tag}/wk",

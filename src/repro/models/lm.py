@@ -164,6 +164,61 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
                         init_cache_specs(cfg, batch, max_len))
 
 
+# ---------------------------------------------------------------------------
+# paged (block-table) KV cache
+# ---------------------------------------------------------------------------
+def paged_lens(cfg: ModelConfig, max_len: int) -> dict:
+    """Logical per-slot cache lengths for the paged layout.
+
+    Mirrors the contiguous rule in ``stack.block_state_specs``: sliding-window
+    layers hold ``min(window, max_len)`` positions; when the window does not
+    shrink the cache they share the global table (lens equal)."""
+    ring = min(cfg.sliding_window, max_len) if cfg.sliding_window else 0
+    has_ring = ring and ring < max_len and "local" in cfg.blocks()
+    return {"global": max_len, "local": ring if has_ring else max_len}
+
+
+def init_paged_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                           block_size: int, num_blocks: int,
+                           num_ring_blocks: int = 0):
+    """Abstract paged cache: attention layers become block pools of shape
+    (num_blocks + 1, block_size, kv_heads, head_dim) — the extra row is the
+    never-written zero block that unallocated block-table entries gather from.
+    Recurrent-state layers (mamba/xlstm) keep their per-slot (batch, ...) rows.
+    """
+    lens = paged_lens(cfg, max_len)
+    kv_shape = (cfg.num_kv_heads, cfg.head_dim)
+    cache = {}
+    for i, kind in enumerate(cfg.blocks()):
+        name = f"layer_{i:03d}"
+        if kind in stk.ATTN_KINDS:
+            ring = kind == "local" and lens["local"] != lens["global"]
+            rows = (num_ring_blocks if ring else num_blocks) + 1
+            blk = {"k": jax.ShapeDtypeStruct((rows, block_size) + kv_shape,
+                                             cfg.dtype),
+                   "v": jax.ShapeDtypeStruct((rows, block_size) + kv_shape,
+                                             cfg.dtype)}
+            if cfg.is_encdec:
+                xrows = num_blocks + 1       # cross K/V pages the global table
+                blk["ck"] = jax.ShapeDtypeStruct(
+                    (xrows, block_size) + kv_shape, cfg.dtype)
+                blk["cv"] = jax.ShapeDtypeStruct(
+                    (xrows, block_size) + kv_shape, cfg.dtype)
+            cache[name] = blk
+        else:
+            cache[name] = stk.block_state_specs(cfg, kind, batch, max_len)
+    return cache
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     block_size: int, num_blocks: int,
+                     num_ring_blocks: int = 0):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        init_paged_cache_specs(cfg, batch, max_len, block_size, num_blocks,
+                               num_ring_blocks))
+
+
 def prefill(params, batch, cfg: ModelConfig, ctx: Ctx, cache):
     """Run the prompt through the model, filling `cache`.
 
@@ -208,7 +263,7 @@ def _cache_len(cache):
 
 
 def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,
-                active=None):
+                active=None, page_tables=None, page_lens=None, enc_lens=None):
     """One decode step: `tokens` (B,) generated at position `index`.
 
     `index` is either a scalar (lockstep: all rows at the same position) or a
@@ -217,6 +272,15 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,
     inactive rows still flow through the matmuls (SPMD batch) but their cache
     and recurrent-state rows are left untouched, so a retired slot's region
     stays frozen until the scheduler prefills a new request into it.
+
+    `page_tables` ({"global": (B,Tg), "local": (B,Tl)} int32) + `page_lens`
+    (static {"global": max_len, "local": ring_len}) switch attention layers to
+    the paged block-table cache layout (see lm.init_paged_cache).
+
+    `enc_lens` (B,) int masks enc-dec cross-attention to each row's real
+    encoder positions — serving engines cache ck/cv at max_len (zero-padded
+    past the encoder length), and without the mask those phantom zero-K
+    positions would each soak up exp(0) of softmax mass.
 
     Returns (logits (B, vocab), new_cache, aux).
     """
@@ -230,15 +294,21 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,
         pos = jnp.broadcast_to(idx[None, None], (B, 1))
     else:
         pos = idx[:, None]                                # (B, 1) per-slot
-    max_len = _cache_len(cache) or 1
+    max_len = page_lens["global"] if page_lens else (_cache_len(cache) or 1)
     k_pos = jnp.broadcast_to(jnp.arange(max_len)[None], (B, max_len))
     masks = {"global": common.causal_mask(pos, k_pos),
              "local": common.causal_mask(pos, k_pos, cfg.sliding_window)}
 
+    enc_mask = None
+    if enc_lens is not None and cfg.is_encdec:
+        valid_k = jnp.arange(max_len)[None, :] < jnp.asarray(enc_lens)[:, None]
+        enc_mask = common.full_mask(jnp.ones((B, 1), bool), valid_k)
+
     h, aux, new_caches = stk.apply_stack(
         params["decoder"], x, cfg, cfg.blocks(), cfg.moe_layer_mask(), ctx=ctx,
         tag="dec", positions=pos, mask=masks, caches=cache, cache_index=index,
-        remat=False, active=active)
+        remat=False, active=active, page_tables=page_tables,
+        page_lens=page_lens, enc_mask=enc_mask)
     h = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits, a = _logits(params, h, cfg, ctx)
     aux = add_aux(aux, a)

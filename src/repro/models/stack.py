@@ -97,7 +97,8 @@ def _gate_state(new_state, old_state, active):
 def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
                 tag: str, ctx: Ctx, positions=None, positions3=None, mask=None,
                 cache: Optional[dict] = None, cache_index=None,
-                enc_out=None, enc_mask=None, active=None):
+                enc_out=None, enc_mask=None, active=None, page_tables=None,
+                page_lens=None):
     """One residual block. Returns (y, aux, new_cache_or_None)."""
     aux = new_aux()
     new_cache = {}
@@ -107,20 +108,32 @@ def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
         window = cfg.sliding_window if kind == "local" else 0
         m = mask["local"] if (kind == "local" and isinstance(mask, dict)) else (
             mask["global"] if isinstance(mask, dict) else mask)
+        pt = pl = None
+        if page_tables is not None:
+            # ring layers page through the window-sized table; local layers
+            # whose window >= max_len degenerate to the global table, same as
+            # the contiguous cache layout rule in block_state_specs
+            which = "local" if (kind == "local" and
+                                page_lens["local"] != page_lens["global"]) \
+                else "global"
+            pt, pl = page_tables[which], page_lens[which]
         y, a, kv = self_attention(
             params["attn"], h, cfg.replace(sliding_window=window),
             positions=positions, mask=m, ctx=ctx, tag=f"{tag}/attn",
             cache=cache, cache_index=cache_index, positions3=positions3,
-            active=active)
+            active=active, page_table=pt, page_len=pl or 0)
         aux = add_aux(aux, a)
         if kv:
             new_cache.update(kv)
         x = x + y
         if enc_out is not None or (cache is not None and "ck" in (cache or {})):
             hx = common.rmsnorm(params["norm_x"], x, cfg.norm_eps)
+            xpt = page_tables["global"] if page_tables is not None else None
+            xpl = page_lens["global"] if page_lens is not None else 0
             y, a, ckv = cross_attention(
                 params["xattn"], hx, cfg, enc_out=enc_out, enc_mask=enc_mask,
-                ctx=ctx, tag=f"{tag}/xattn", cache=cache)
+                ctx=ctx, tag=f"{tag}/xattn", cache=cache,
+                page_table=xpt, page_len=xpl)
             aux = add_aux(aux, a)
             if ckv:
                 new_cache.update(ckv)
@@ -164,7 +177,8 @@ def stack_specs(cfg: ModelConfig, num_layers: int, kinds, moe_mask,
 def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
                 tag: str, positions=None, positions3=None, mask=None,
                 caches: Optional[dict] = None, cache_index=None,
-                enc_out=None, enc_mask=None, remat: bool = False, active=None):
+                enc_out=None, enc_mask=None, remat: bool = False, active=None,
+                page_tables=None, page_lens=None):
     """Apply the whole stack. caches: dict layer_name -> block cache."""
     aux = new_aux()
     new_caches = {}
@@ -178,7 +192,8 @@ def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
                                tag=f"{tag}/{name}", ctx=ctx, positions=positions,
                                positions3=positions3, mask=mask, cache=cache,
                                cache_index=cache_index, enc_out=enc_out,
-                               enc_mask=enc_mask, active=active)
+                               enc_mask=enc_mask, active=active,
+                               page_tables=page_tables, page_lens=page_lens)
 
         if remat:
             x, a, upd = jax.checkpoint(

@@ -26,6 +26,20 @@ is free or bound to exactly one in-flight request:
   request, independent of slot placement and co-tenants.
 * **retirement** — a slot is released on EOS, ``max_new`` tokens, or cache
   exhaustion (``max_len``), and immediately becomes available for backfill.
+  Its cache region (contiguous) or blocks (paged) are zeroed on release so a
+  backfilled request can never gather a predecessor's stale K/V.
+* **paged KV (``paged=True``)** — instead of a contiguous ``(B, max_len, ...)``
+  region per slot, attention layers share a pool of ``block_size``-position
+  blocks (:mod:`repro.serve.kv_pool`).  The scheduler keeps a per-request
+  block table: prompt blocks + a decode worst-case reservation are allocated
+  at admission, one reserved block is drawn each time decode crosses a block
+  boundary, and everything is freed at retirement.  Admission is gated on the
+  free-block budget as well as a free batch row, so an engine can hold many
+  more rows than ``max_len``-sized KV regions — short requests no longer
+  strand ``max_len - len`` positions of capacity.  Decode gathers each slot's
+  logical KV view through its table (unallocated entries resolve to a
+  dedicated always-zero block), making paged decode token-identical to the
+  contiguous cache at temperature 0.
 * **energy** — the paper's per-step scalar ``energy_pj`` aux is attributed per
   request: prefill energy goes to the admitted request; each decode step's
   energy is split by read counts — every slot (active or idle) issues the same
@@ -54,10 +68,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.models.context import Ctx
+from repro.models.stack import ATTN_KINDS
 from repro.nn.param import abstract_params, param_shardings
 from repro.parallel.sharding import (RULES, make_shard_fn, batch_shardings,
                                      cache_shardings)
 from repro.serve import sampling
+from repro.serve.kv_pool import PagedKV
 from repro.serve.scheduler import Scheduler, Slot
 
 
@@ -89,15 +105,104 @@ def make_serve_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
     shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
 
     def serve_decode_step(params, cache, tokens, index, active, seed,
-                          sample_seeds, sample_pos, temps, top_k, top_p):
+                          sample_seeds, sample_pos, temps, top_k, top_p,
+                          enc_lens):
         ctx = Ctx(seed=seed, shard=shard)
         logits, cache, aux = lm.decode_step(params, cache, tokens, index, cfg,
-                                            ctx, active=active)
+                                            ctx, active=active,
+                                            enc_lens=enc_lens)
         next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
                                           sample_seeds, sample_pos)
         return next_tok, cache, aux["energy_pj"]
 
     return serve_decode_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules,
+                           page_lens: dict):
+    """Continuous-batching decode against the paged block-table KV cache:
+    same contract as make_serve_decode_step plus the (B, T) block tables."""
+    shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
+
+    def paged_decode_step(params, cache, tokens, index, active, seed,
+                          sample_seeds, sample_pos, temps, top_k, top_p,
+                          enc_lens, table_g, table_l):
+        ctx = Ctx(seed=seed, shard=shard)
+        logits, cache, aux = lm.decode_step(
+            params, cache, tokens, index, cfg, ctx, active=active,
+            page_tables={"global": table_g, "local": table_l},
+            page_lens=page_lens, enc_lens=enc_lens)
+        next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
+                                          sample_seeds, sample_pos)
+        return next_tok, cache, aux["energy_pj"]
+
+    return paged_decode_step
+
+
+def make_paged_insert(cfg: ModelConfig, block_size: int, page_lens: dict):
+    """Scatter a freshly prefilled batch-1 contiguous cache into the pools.
+
+    `row_g`/`row_l` are the slot's block-table rows with unallocated entries
+    pointing out of bounds (dropped), so only the request's own blocks are
+    written — including their zero padding tails, which clears any stale
+    content left by the blocks' previous owner."""
+    kinds = cfg.blocks()
+
+    def pad_to_blocks(x, width):
+        # (1, L, KV, hd) -> (width, block_size, KV, hd), zero-padded
+        pad = width * block_size - x.shape[1]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        return x[0].reshape(width, block_size, *x.shape[2:])
+
+    def insert(big, small, row_g, row_l, slot):
+        out = {}
+        for i, kind in enumerate(kinds):
+            name = f"layer_{i:03d}"
+            b, s = big[name], small[name]
+            if kind in ATTN_KINDS:
+                ring = (kind == "local" and
+                        page_lens["local"] != page_lens["global"])
+                e = {}
+                for key in b:
+                    row = row_g if (key in ("ck", "cv") or not ring) else row_l
+                    e[key] = b[key].at[row].set(
+                        pad_to_blocks(s[key].astype(b[key].dtype),
+                                      row.shape[0]),
+                        mode="drop")
+                out[name] = e
+            else:
+                out[name] = jax.tree.map(
+                    lambda bb, ss: bb.at[slot].set(ss[0].astype(bb.dtype)),
+                    b, s)
+        return out
+
+    return insert
+
+
+def make_paged_zero(cfg: ModelConfig, page_lens: dict):
+    """Zero a retiring request's pool blocks (+ its recurrent-state row) so a
+    later owner of the same blocks can never gather its stale K/V."""
+    kinds = cfg.blocks()
+
+    def zero(big, ids_g, ids_l, slot):
+        out = {}
+        for i, kind in enumerate(kinds):
+            name = f"layer_{i:03d}"
+            b = big[name]
+            if kind in ATTN_KINDS:
+                ring = (kind == "local" and
+                        page_lens["local"] != page_lens["global"])
+                e = {}
+                for key in b:
+                    ids = ids_g if (key in ("ck", "cv") or not ring) else ids_l
+                    e[key] = b[key].at[ids].set(0.0, mode="drop")
+                out[name] = e
+            else:
+                out[name] = jax.tree.map(lambda bb: bb.at[slot].set(0.0), b)
+        return out
+
+    return zero
 
 
 def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
@@ -156,7 +261,9 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int, max_len: int,
                  mesh: Optional[Mesh] = None, rules=None, seed: int = 0,
-                 fresh_noise: bool = True):
+                 fresh_noise: bool = True, paged: bool = False,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 num_ring_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
@@ -164,41 +271,115 @@ class ServingEngine:
         self.seed = seed
         self.fresh_noise = fresh_noise
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
-        self._decode = jax.jit(make_serve_decode_step(cfg, mesh, rules),
-                               donate_argnums=(1,))
-        self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
         self._sample = jax.jit(sampling.sample_tokens)
-        self.scheduler = Scheduler(batch_size)
-        self.cache = lm.init_cache(cfg, batch_size, max_len)
+        # paged mode only changes attention caches; pure-recurrent stacks
+        # (mamba/xlstm) have nothing to page
+        self.paged = bool(paged) and any(k in ATTN_KINDS for k in cfg.blocks())
+        if self.paged:
+            lens = lm.paged_lens(cfg, max_len)
+            ring_len = lens["local"] if lens["local"] != lens["global"] else 0
+            wg = -(-max_len // block_size)
+            wl = -(-ring_len // block_size) if ring_len else 1
+            # default pools: capacity-equal to the contiguous per-slot regions
+            if num_blocks is None:
+                num_blocks = batch_size * wg
+            if num_ring_blocks is None:
+                num_ring_blocks = batch_size * wl if ring_len else 0
+            self.block_size = block_size
+            self.kv = PagedKV(batch_size, max_len, block_size, num_blocks,
+                              ring_len, num_ring_blocks if ring_len else 0)
+            self.page_lens = lens
+            self.cache = lm.init_paged_cache(
+                cfg, batch_size, max_len, block_size, num_blocks,
+                num_ring_blocks if ring_len else 0)
+            self._decode = jax.jit(
+                make_paged_decode_step(cfg, mesh, rules, lens),
+                donate_argnums=(1,))
+            self._insert = jax.jit(make_paged_insert(cfg, block_size, lens),
+                                   donate_argnums=(0,))
+            self._zero_retired = jax.jit(make_paged_zero(cfg, lens),
+                                         donate_argnums=(0,))
+            self.scheduler = Scheduler(batch_size, kv=self.kv)
+        else:
+            self.kv = None
+            self._decode = jax.jit(make_serve_decode_step(cfg, mesh, rules),
+                                   donate_argnums=(1,))
+            self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+            self._zero_retired = jax.jit(self._zero_slot, donate_argnums=(0,))
+            self.scheduler = Scheduler(batch_size)
+            self.cache = lm.init_cache(cfg, batch_size, max_len)
         self.total_energy_pj = 0.0
         self.idle_energy_pj = 0.0    # decode energy of idle slots (waste)
         self._steps = 0              # global decode-step counter (noise clock)
+        self.peak_concurrent = 0     # high-water mark of active slots
+        self._tables_dev = None      # device block tables (None = stale)
 
     # -- jitted helpers ------------------------------------------------------
     @staticmethod
     def _insert_slot(big, small, slot):
-        """Scatter a freshly prefilled batch-1 cache into slot `slot`."""
-        return jax.tree.map(lambda b, s: b.at[slot].set(s[0].astype(b.dtype)),
-                            big, small)
+        """Scatter a freshly prefilled batch-1 cache into slot `slot` (entries
+        shorter than the slot region — e.g. bucketed cross K/V — are
+        zero-padded to it)."""
+        def put(b, s):
+            v = s[0].astype(b.dtype)
+            pads = [(0, bd - vd) for bd, vd in zip(b.shape[1:], v.shape)]
+            if any(p != (0, 0) for p in pads):
+                v = jnp.pad(v, pads)
+            return b.at[slot].set(v)
+
+        return jax.tree.map(put, big, small)
+
+    @staticmethod
+    def _pad_ids(ids, width: int, sentinel: int) -> np.ndarray:
+        """Fixed-width int32 id vector for the jitted zero op: pad the freed
+        block ids with the out-of-bounds scatter sentinel (dropped)."""
+        out = np.full(width, sentinel, np.int32)
+        out[:len(ids)] = ids
+        return out
+
+    @staticmethod
+    def _zero_slot(big, slot):
+        """Zero a retired slot's cache region before the next backfill: the
+        full-region prefill scatter used to mask stale reads, but nothing may
+        rely on that (partial inserts / paged blocks would leak the previous
+        request's K/V)."""
+        return jax.tree.map(lambda b: b.at[slot].set(0.0), big)
 
     # -- streaming API -------------------------------------------------------
+    def _bucket_len(self, prompt_len: int) -> int:
+        """Cache positions the prompt occupies: its power-of-two bucket, or the
+        exact length when the bucket would leave no decode room."""
+        S = prefill_bucket(prompt_len)
+        return prompt_len if S >= self.max_len else S
+
     def submit(self, req: GenRequest) -> int:
         """Enqueue a request; returns its rid. Admission happens in step()."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         assert 1 <= len(prompt) <= self.max_len, \
             f"prompt length {len(prompt)} vs max_len {self.max_len}"
         assert req.max_new >= 1, f"max_new must be >= 1, got {req.max_new}"
+        if self.paged:
+            # FIFO admission head-blocks: a request that cannot fit even an
+            # empty pool would deadlock the queue, so refuse it up front
+            # (hard error, not assert — the guard must survive python -O)
+            if not self.kv.fits(self._bucket_len(len(prompt)), req.max_new):
+                raise ValueError(
+                    f"request needs more KV blocks than the pool holds "
+                    f"({self.kv.pool_g.num_blocks} x {self.block_size})")
         return self.scheduler.submit(req)
 
     def step(self) -> List[GenResult]:
-        """Admit queued requests into free slots, then decode one token for
-        every active slot. Returns requests finished this step."""
+        """Admit queued requests into free slots (paged: against the
+        free-block budget), then decode one token for every active slot.
+        Returns requests finished this step."""
         finished = []
         while self.scheduler.pending:
-            sid = self.scheduler.free_slot()
-            if sid is None:
+            rid, req = self.scheduler.peek_pending()
+            if not self.scheduler.can_admit(self._bucket_len(len(req.prompt)),
+                                            req.max_new):
                 break
-            rid, req = self.scheduler.pop_pending()
+            self.scheduler.pop_pending()
+            sid = self.scheduler.free_slot()
             self._admit(sid, rid, req)
             done = self._maybe_retire(sid)
             if done is not None:
@@ -217,6 +398,7 @@ class ServingEngine:
         temps = np.zeros(B, np.float32)
         topk = np.zeros(B, np.int32)
         topp = np.ones(B, np.float32)
+        enc = np.zeros(B, np.int32)
         for i, s in active:
             tokens[i] = s.last_token
             index[i] = s.pos
@@ -226,13 +408,26 @@ class ServingEngine:
             temps[i] = s.req.temperature
             topk[i] = s.req.top_k
             topp[i] = s.req.top_p
+            enc[i] = s.enc_len
 
+        self.peak_concurrent = max(self.peak_concurrent, len(active))
+        extra = ()
+        if self.paged:
+            # append-on-decode: a slot crossing a block boundary draws one of
+            # its reserved blocks before the step writes at pos
+            for i, s in active:
+                if self.scheduler.kv_ensure(i, s.pos):
+                    self._tables_dev = None
+            if self._tables_dev is None:      # changed since last upload
+                tg, tl = self.kv.gather_tables()
+                self._tables_dev = (jnp.asarray(tg), jnp.asarray(tl))
+            extra = self._tables_dev
         step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
         next_tok, self.cache, e = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(index),
             jnp.asarray(act), jnp.uint32(step_seed), jnp.asarray(seeds),
             jnp.asarray(spos), jnp.asarray(temps), jnp.asarray(topk),
-            jnp.asarray(topp))
+            jnp.asarray(topp), jnp.asarray(enc), *extra)
         self._steps += 1
         e = float(e)
         self.total_energy_pj += e
@@ -287,13 +482,13 @@ class ServingEngine:
     # -- internals -----------------------------------------------------------
     def _admit(self, slot_id: int, rid: int, req: GenRequest):
         """Prefill `req` alone into slot `slot_id` (left-pad into a power-of-two
-        bucket) and sample its first token from the prefill logits."""
+        bucket) and sample its first token from the prefill logits.  Paged
+        mode first allocates the slot's blocks (+ decode reservation), then
+        scatters the prefilled contiguous batch-1 cache into them."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
-        S = prefill_bucket(len(prompt))
-        if S >= self.max_len:
-            # bucket would leave no decode room: prefill at exact length
-            # (one extra compile for the rare near-capacity prompt)
-            S = len(prompt)
+        S = self._bucket_len(len(prompt))
+        # bucket >= max_len: prefill at exact length (one extra compile for
+        # the rare near-capacity prompt); left-pad into the bucket otherwise
         toks = np.zeros((1, S), np.int32)
         toks[0, S - len(prompt):] = prompt               # left-pad preserved
         batch = {"tokens": jnp.asarray(toks)}
@@ -304,7 +499,15 @@ class ServingEngine:
         small = lm.init_cache(self.cfg, 1, self.max_len)
         small, logits, aux = self._prefill(self.params, batch, small,
                                            jnp.uint32(self.seed))
-        self.cache = self._insert(self.cache, small, jnp.int32(slot_id))
+        if self.paged:
+            ok = self.scheduler.kv_admit(slot_id, S, req.max_new)
+            assert ok, "admission raced the block budget"   # step() checked
+            self._tables_dev = None
+            row_g, row_l = self.kv.scatter_rows(slot_id)
+            self.cache = self._insert(self.cache, small, jnp.asarray(row_g),
+                                      jnp.asarray(row_l), jnp.int32(slot_id))
+        else:
+            self.cache = self._insert(self.cache, small, jnp.int32(slot_id))
         prefill_e = float(aux["energy_pj"])
         self.total_energy_pj += prefill_e
         tok0 = int(self._sample(
@@ -315,7 +518,8 @@ class ServingEngine:
             jnp.asarray([0], jnp.int32))[0])
         self.scheduler.place(slot_id, Slot(
             rid=rid, req=req, pos=S, last_token=tok0, generated=[tok0],
-            prefill_energy_pj=prefill_e))
+            prefill_energy_pj=prefill_e,
+            enc_len=S if self.cfg.is_encdec else 0))
 
     def _maybe_retire(self, slot_id: int) -> Optional[GenResult]:
         s = self.scheduler.slots[slot_id]
@@ -328,6 +532,20 @@ class ServingEngine:
         else:
             return None
         slot = self.scheduler.retire(slot_id)
+        # zero the retiring request's cache before its region/blocks can be
+        # backfilled — stale K/V must never be gatherable by a later request
+        if self.paged:
+            freed_g, freed_l = self.scheduler.kv_release(slot_id)
+            self._tables_dev = None
+            ids_g = self._pad_ids(freed_g, self.kv.width_g,
+                                  self.kv.zero_block_g + 1)
+            ids_l = self._pad_ids(freed_l, self.kv.width_l,
+                                  self.kv.zero_block_l + 1)
+            self.cache = self._zero_retired(self.cache, jnp.asarray(ids_g),
+                                            jnp.asarray(ids_l),
+                                            jnp.int32(slot_id))
+        else:
+            self.cache = self._zero_retired(self.cache, jnp.int32(slot_id))
         return GenResult(
             rid=slot.rid, tokens=np.asarray(slot.generated, np.int32),
             energy_pj=slot.prefill_energy_pj + slot.energy_pj,

@@ -1,0 +1,231 @@
+"""Paged KV cache: block pool allocator + per-slot block tables (host side).
+
+Instead of one contiguous ``(batch, max_len, ...)`` KV region per slot, the
+paged cache is a shared pool of fixed-size blocks per attention layer:
+
+* device side — each attention layer's cache is ``(num_blocks + 1, block_size,
+  kv_heads, head_dim)``.  Block id ``b`` names row ``b`` of every same-kind
+  layer's pool (vLLM-style: one id space, per-layer storage).  Row
+  ``num_blocks`` is the **zero block**: it is never allocated and never
+  written, so gathering through an unallocated table entry reads exact zeros —
+  bit-identical to the zero-initialized contiguous cache.  Scatter sentinel
+  ``num_blocks + 1`` is out of bounds and dropped (``mode="drop"``).
+* host side — this module.  :class:`BlockPool` is the free-list allocator
+  with *reservation credits*: admission allocates the prompt's blocks and
+  reserves the decode worst case, so a request admitted once can never hit an
+  out-of-blocks condition mid-decode (``append`` only converts credits).
+  :class:`PagedKV` bundles the two id spaces (global/cross layers vs
+  sliding-window ring layers) with the per-slot block tables the decode step
+  gathers through.
+
+The scheduler drives this state: allocate on admission, append on decode when
+a slot's position crosses a block boundary, free (and zero, on device) on
+retirement.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class BlockPool:
+    """Fixed-capacity block allocator with reservation credits.
+
+    ``alloc(owner, n, reserve=r)`` either hands out ``n`` block ids and
+    earmarks ``r`` more for later ``append(owner)`` calls, or returns ``None``
+    without any side effects (admission refusal must leave the pool
+    consistent).  Free blocks backing reservations are not admission headroom:
+    ``num_free`` already subtracts outstanding credits.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 0 and block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owned: Dict[int, List[int]] = {}
+        self._reserved: Dict[int, int] = {}
+
+    # -- queries -------------------------------------------------------------
+    def blocks_for(self, positions: int) -> int:
+        """Blocks needed to hold `positions` cache positions."""
+        return -(-max(int(positions), 0) // self.block_size)
+
+    @property
+    def num_reserved(self) -> int:
+        return sum(self._reserved.values())
+
+    @property
+    def num_free(self) -> int:
+        """Admission headroom: free blocks not backing a reservation."""
+        return len(self._free) - self.num_reserved
+
+    @property
+    def num_owned(self) -> int:
+        return sum(len(ids) for ids in self._owned.values())
+
+    def owned(self, owner: int) -> List[int]:
+        return list(self._owned.get(owner, []))
+
+    def can(self, blocks: int) -> bool:
+        return self.num_free >= blocks
+
+    # -- mutation ------------------------------------------------------------
+    def alloc(self, owner: int, blocks: int, reserve: int = 0
+              ) -> Optional[List[int]]:
+        assert owner not in self._owned, f"owner {owner} already holds blocks"
+        if self.num_free < blocks + reserve:
+            return None
+        ids = [self._free.pop() for _ in range(blocks)]
+        self._owned[owner] = ids
+        if reserve:
+            self._reserved[owner] = reserve
+        return list(ids)
+
+    def append(self, owner: int) -> int:
+        """Convert one of `owner`'s reservation credits into a block."""
+        assert self._reserved.get(owner, 0) > 0, \
+            f"owner {owner} has no reserved blocks left"
+        self._reserved[owner] -= 1
+        bid = self._free.pop()            # safe: alloc() kept credits backed
+        self._owned[owner].append(bid)
+        return bid
+
+    def free(self, owner: int) -> List[int]:
+        """Release all of `owner`'s blocks and credits; returns the block ids."""
+        ids = self._owned.pop(owner, [])
+        self._reserved.pop(owner, None)
+        self._free.extend(ids)
+        return ids
+
+    def check(self) -> None:
+        """Conservation invariant: every block is free xor owned, exactly once."""
+        owned = [b for ids in self._owned.values() for b in ids]
+        assert len(set(owned)) == len(owned), "double-allocated block"
+        assert sorted(owned + self._free) == list(range(self.num_blocks)), \
+            "block leak/duplication"
+        assert len(self._free) >= self.num_reserved, "unbacked reservation"
+
+
+class PagedKV:
+    """Host-side paged-KV state: two block-id spaces + per-slot block tables.
+
+    * ``pool_g`` / ``table_g`` — global-attention (and cross-attention) layers:
+      a slot's table row maps logical positions ``[0, max_len)`` to blocks,
+      ``table_g[slot, j]`` holding positions ``[j*bs, (j+1)*bs)``.
+    * ``pool_l`` / ``table_l`` — sliding-window ring layers: the ring's
+      ``ring_len`` slots are paged the same way (all blocks allocated at
+      admission — ring writes wrap, so the table never grows).
+
+    Host tables store ``-1`` for unallocated; device views substitute the
+    gather sentinel (the zero block) or the scatter sentinel (out of bounds).
+    """
+
+    def __init__(self, batch_size: int, max_len: int, block_size: int,
+                 num_blocks: int, ring_len: int = 0, num_ring_blocks: int = 0):
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.block_size = block_size
+        self.ring_len = ring_len
+        self.pool_g = BlockPool(num_blocks, block_size)
+        self.pool_l = BlockPool(num_ring_blocks, block_size) if ring_len else None
+        self.width_g = self.pool_g.blocks_for(max_len)
+        self.width_l = self.pool_g.blocks_for(ring_len) if ring_len else 1
+        self.table_g = np.full((batch_size, self.width_g), -1, np.int64)
+        self.table_l = np.full((batch_size, self.width_l), -1, np.int64)
+
+    # -- admission sizing ----------------------------------------------------
+    def needs(self, prompt_len: int, max_new: int) -> Tuple[int, int, int]:
+        """(global alloc, global reserve, ring alloc) block counts for a
+        request prefilled at `prompt_len` generating up to `max_new` tokens.
+
+        Decode writes positions ``[prompt_len, prompt_len + max_new - 1)``
+        (the first token comes from prefill), clipped to ``max_len``.
+        """
+        total = min(prompt_len + max_new - 1, self.max_len)
+        ga = self.pool_g.blocks_for(prompt_len)
+        gr = self.pool_g.blocks_for(total) - ga
+        la = self.pool_l.blocks_for(self.ring_len) if self.pool_l else 0
+        return ga, gr, la
+
+    def fits(self, prompt_len: int, max_new: int) -> bool:
+        """Whether the request could ever be admitted on an empty pool."""
+        ga, gr, la = self.needs(prompt_len, max_new)
+        ok = self.pool_g.num_blocks >= ga + gr
+        if self.pool_l is not None:
+            ok = ok and self.pool_l.num_blocks >= la
+        return ok
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        ga, gr, la = self.needs(prompt_len, max_new)
+        ok = self.pool_g.can(ga + gr)
+        if self.pool_l is not None:
+            ok = ok and self.pool_l.can(la)
+        return ok
+
+    # -- lifecycle -----------------------------------------------------------
+    def admit(self, slot: int, prompt_len: int, max_new: int) -> bool:
+        """Allocate prompt blocks + decode reservation for `slot`. All-or-
+        nothing: a refusal leaves pools and tables untouched."""
+        ga, gr, la = self.needs(prompt_len, max_new)
+        ids_g = self.pool_g.alloc(slot, ga, reserve=gr)
+        if ids_g is None:
+            return False
+        if self.pool_l is not None:
+            ids_l = self.pool_l.alloc(slot, la)
+            if ids_l is None:
+                self.pool_g.free(slot)
+                return False
+            self.table_l[slot, :la] = ids_l
+        self.table_g[slot, :ga] = ids_g
+        return True
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Make position `pos` writable for `slot`, appending a reserved block
+        at a block boundary. Returns True if the table changed."""
+        j = pos // self.block_size
+        if self.table_g[slot, j] >= 0:
+            return False
+        assert (self.table_g[slot, :j] >= 0).all(), "non-contiguous block table"
+        self.table_g[slot, j] = self.pool_g.append(slot)
+        return True
+
+    def release(self, slot: int) -> Tuple[List[int], List[int]]:
+        """Free `slot`'s blocks (both id spaces) and clear its table rows."""
+        g = self.pool_g.free(slot)
+        l = self.pool_l.free(slot) if self.pool_l is not None else []
+        self.table_g[slot] = -1
+        self.table_l[slot] = -1
+        return g, l
+
+    # -- device views --------------------------------------------------------
+    @property
+    def zero_block_g(self) -> int:
+        return self.pool_g.num_blocks
+
+    @property
+    def zero_block_l(self) -> int:
+        return self.pool_l.num_blocks if self.pool_l is not None else 0
+
+    def gather_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, Tg), (B, Tl) int32 tables for reads: unallocated -> zero block."""
+        tg = np.where(self.table_g >= 0, self.table_g,
+                      self.zero_block_g).astype(np.int32)
+        tl = np.where(self.table_l >= 0, self.table_l,
+                      self.zero_block_l).astype(np.int32)
+        return tg, tl
+
+    def scatter_rows(self, slot: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(Tg,), (Tl,) int32 rows for prefill insert: unallocated -> out of
+        bounds (dropped), so the zero block is never written."""
+        rg = np.where(self.table_g[slot] >= 0, self.table_g[slot],
+                      self.zero_block_g + 1).astype(np.int32)
+        rl = np.where(self.table_l[slot] >= 0, self.table_l[slot],
+                      self.zero_block_l + 1).astype(np.int32)
+        return rg, rl
+
+    def check(self) -> None:
+        self.pool_g.check()
+        if self.pool_l is not None:
+            self.pool_l.check()

@@ -8,12 +8,20 @@ free (including mid-decode — backfill never recompiles the decode step because
 the batch shape is static), and retires slots on EOS / ``max_new`` / cache
 exhaustion.  The scheduler only does bookkeeping; prefill and decode stay in
 the engine.
+
+With a :class:`~repro.serve.kv_pool.PagedKV` attached, the scheduler also
+maintains the per-request block tables: admission additionally requires the
+free-block budget (prompt blocks + the decode worst-case reservation), decode
+appends a block when a slot's position crosses a block boundary, and
+retirement frees the request's blocks back to the pool.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
 from typing import List, Optional
+
+from repro.serve.kv_pool import PagedKV
 
 
 @dataclasses.dataclass
@@ -27,6 +35,7 @@ class Slot:
     energy_pj: float = 0.0          # decode-energy share accumulated so far
     prefill_energy_pj: float = 0.0
     steps: int = 0                  # decode steps this request participated in
+    enc_len: int = 0                # real encoder positions cached (enc-dec)
 
     @property
     def sample_pos(self) -> int:
@@ -35,10 +44,11 @@ class Slot:
 
 
 class Scheduler:
-    """FIFO admission queue + slot table."""
+    """FIFO admission queue + slot table (+ optional paged-KV block tables)."""
 
-    def __init__(self, batch_size: int):
+    def __init__(self, batch_size: int, kv: Optional[PagedKV] = None):
         self.batch_size = batch_size
+        self.kv = kv
         self.queue: deque = deque()          # (rid, req) awaiting a slot
         self.slots: List[Optional[Slot]] = [None] * batch_size
         self._next_rid = 0
@@ -54,6 +64,9 @@ class Scheduler:
     def pending(self) -> int:
         return len(self.queue)
 
+    def peek_pending(self):
+        return self.queue[0]
+
     def pop_pending(self):
         return self.queue.popleft()
 
@@ -63,6 +76,14 @@ class Scheduler:
             if s is None:
                 return i
         return None
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        """A slot is free and (paged) the block budget covers the request."""
+        if self.free_slot() is None:
+            return False
+        if self.kv is None:
+            return True
+        return self.kv.can_admit(prompt_len, max_new)
 
     def place(self, slot_id: int, slot: Slot) -> None:
         assert self.slots[slot_id] is None, f"slot {slot_id} occupied"
@@ -84,3 +105,18 @@ class Scheduler:
     @property
     def busy(self) -> bool:
         return self.num_active > 0 or self.pending > 0
+
+    # -- paged-KV block tables ----------------------------------------------
+    def kv_admit(self, slot_id: int, prompt_len: int, max_new: int) -> bool:
+        """Allocate prompt blocks + decode reservation for an admission."""
+        return self.kv is None or self.kv.admit(slot_id, prompt_len, max_new)
+
+    def kv_ensure(self, slot_id: int, pos: int) -> bool:
+        """Append-on-decode: make `pos` writable. True if the table changed."""
+        return self.kv is not None and self.kv.ensure(slot_id, pos)
+
+    def kv_release(self, slot_id: int):
+        """Free a retiring slot's blocks; returns (global ids, ring ids)."""
+        if self.kv is None:
+            return [], []
+        return self.kv.release(slot_id)

@@ -3,4 +3,14 @@
 # (and tests/test_distributed.py spawns subprocesses that set it themselves).
 import os
 
+import pytest
+
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def pytest_collection_modifyitems(config, items):
+    # tier-1 = the fast verify suite (scripts/run_tier1.sh): everything not
+    # explicitly opted out with @pytest.mark.slow
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)

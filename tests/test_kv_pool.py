@@ -1,0 +1,114 @@
+"""Block allocator + paged-KV host state: no double allocation, free-list
+conservation under churn, and consistent refusal on out-of-blocks admission."""
+import numpy as np
+import pytest
+
+from repro.serve.kv_pool import BlockPool, PagedKV
+
+
+def test_alloc_unique_and_free_roundtrip():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    a = pool.alloc(0, 3)
+    b = pool.alloc(1, 3)
+    assert a is not None and b is not None
+    assert len(set(a) | set(b)) == 6, "blocks handed out twice"
+    assert pool.num_free == 2
+    pool.check()
+    freed = pool.free(0)
+    assert sorted(freed) == sorted(a)
+    assert pool.num_free == 5
+    pool.check()
+
+
+def test_blocks_for_rounding():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    assert [pool.blocks_for(n) for n in (0, 1, 4, 5, 8)] == [0, 1, 1, 2, 2]
+
+
+def test_reservation_backs_append_and_counts_against_admission():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    ids = pool.alloc(0, 1, reserve=2)
+    assert ids is not None
+    # 1 owned + 2 reserved: only 1 block of admission headroom left
+    assert pool.num_free == 1
+    assert pool.alloc(1, 2) is None, "reservation must not be admission headroom"
+    b1 = pool.append(0)
+    b2 = pool.append(0)
+    assert len({ids[0], b1, b2}) == 3
+    with pytest.raises(AssertionError):
+        pool.append(0)                       # credits exhausted
+    pool.check()
+    assert sorted(pool.free(0)) == sorted([ids[0], b1, b2])
+    assert pool.num_free == 4
+
+
+def test_oom_refusal_leaves_pool_consistent():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    ids = pool.alloc(0, 2)
+    before = (pool.num_free, sorted(pool.owned(0)))
+    assert pool.alloc(1, 2, reserve=1) is None     # needs 3, only 2 free
+    assert (pool.num_free, sorted(pool.owned(0))) == before
+    assert pool.owned(1) == []
+    pool.check()
+    more = pool.alloc(1, 2)                        # exact fit still works
+    assert more is not None and not (set(more) & set(ids))
+    pool.check()
+
+
+def test_conservation_under_random_churn():
+    rng = np.random.default_rng(0)
+    pool = BlockPool(num_blocks=16, block_size=4)
+    live = {}
+    for t in range(300):
+        if live and (rng.random() < 0.4 or len(live) == 8):
+            owner = int(rng.choice(list(live)))
+            pool.free(owner)
+            del live[owner]
+        else:
+            owner = t + 1000
+            n = int(rng.integers(1, 4))
+            r = int(rng.integers(0, 3))
+            ids = pool.alloc(owner, n, reserve=r)
+            if ids is not None:
+                live[owner] = True
+                for _ in range(int(rng.integers(0, r + 1))):
+                    pool.append(owner)
+        pool.check()
+    for owner in list(live):
+        pool.free(owner)
+    pool.check()
+    assert pool.num_free == 16 and pool.num_owned == 0
+
+
+def test_paged_kv_admit_tables_and_release():
+    kv = PagedKV(batch_size=2, max_len=16, block_size=4, num_blocks=5,
+                 ring_len=8, num_ring_blocks=4)
+    assert kv.width_g == 4 and kv.width_l == 2
+    # bucket 8 prompt + 4 new tokens -> positions 11 -> 2 alloc + 1 reserve
+    assert kv.needs(8, 4) == (2, 1, 2)
+    assert kv.admit(0, 8, 4)
+    tg, tl = kv.gather_tables()
+    assert (kv.table_g[0, :2] >= 0).all() and (kv.table_g[0, 2:] == -1).all()
+    assert (tg[0, 2:] == kv.zero_block_g).all(), "unallocated -> zero block"
+    assert (tl[0] != kv.zero_block_l).all(), "ring fully allocated at admission"
+    # append-on-decode at the block boundary
+    assert not kv.ensure(0, 7)                   # inside an allocated block
+    assert kv.ensure(0, 8)                       # crosses into block 2
+    assert kv.table_g[0, 2] >= 0
+    rg, _ = kv.scatter_rows(0)
+    assert (rg[3] == kv.zero_block_g + 1), "scatter sentinel is out of bounds"
+    # second admission must refuse: it needs 2+1 g-blocks but owner 0 holds 3
+    # of 5 (2 allocated + 1 appended), leaving only 2 free
+    assert kv.can_admit(8, 4) is False
+    kv.check()
+    g, l = kv.release(0)
+    assert len(g) == 3 and len(l) == 2
+    assert (kv.table_g[0] == -1).all() and (kv.table_l[0] == -1).all()
+    assert kv.can_admit(8, 4)
+    kv.check()
+
+
+def test_paged_kv_fits_vs_pool_capacity():
+    kv = PagedKV(batch_size=1, max_len=32, block_size=4, num_blocks=4)
+    assert kv.fits(8, 4)          # 3 blocks worst case
+    assert not kv.fits(16, 8)     # ceil(23/4) = 6 > 4: would deadlock FIFO

@@ -130,6 +130,54 @@ def test_temperature_sampling_deterministic_per_seed_and_varies(setup):
     assert not np.array_equal(res.tokens, a1)
 
 
+def test_energy_conservation_paged(setup):
+    """Per-request + idle == total still holds under paged serving when
+    requests hold different block counts (mixed prompt buckets / decode
+    budgets), and every request is billed a positive energy."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    # bucket 4 vs bucket 8 prompts, short vs long decode: 2 vs 4 global blocks
+    reqs = [
+        GenRequest(prompt=rng.integers(0, cfg.vocab_size, 3).astype(np.int32),
+                   max_new=3),
+        GenRequest(prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                   max_new=8),
+        GenRequest(prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                   max_new=5),
+    ]
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=24, seed=7,
+                        fresh_noise=False, paged=True, block_size=4)
+    results = eng.serve(reqs, stagger=2)
+    assert sorted(r.rid for r in results) == [0, 1, 2]
+    counts = {r.rid: len(r.tokens) for r in results}
+    assert counts == {0: 3, 1: 8, 2: 5}
+    for r in results:
+        assert r.energy_pj > 0 and r.prefill_energy_pj > 0
+    total = sum(r.energy_pj for r in results) + eng.idle_energy_pj
+    np.testing.assert_allclose(total, eng.total_energy_pj, rtol=1e-6)
+    # all blocks back and zeroed once everything retired
+    eng.kv.check()
+    assert eng.kv.pool_g.num_free == eng.kv.pool_g.num_blocks
+
+
+def test_retired_slot_region_zeroed(setup):
+    """Regression for the latent backfill bug: a retired slot's contiguous
+    cache region must be zeroed at retirement, not merely overwritten by the
+    next admission's full-region scatter (partial/paged inserts would
+    otherwise read the previous request's stale K/V)."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=16, seed=3,
+                        fresh_noise=False)
+    eng.submit(GenRequest(prompt=rng.integers(0, cfg.vocab_size, 5)
+                          .astype(np.int32), max_new=3))
+    eng.drain()
+    for name, blk in eng.cache.items():
+        for key, arr in blk.items():
+            assert float(jnp.abs(arr[0]).max()) == 0.0, \
+                f"stale data left in slot 0 of {name}/{key} after retirement"
+
+
 def test_sample_tokens_unit():
     logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)),
                          jnp.float32)
