@@ -17,6 +17,12 @@ Three workloads on a smoke config:
   KV memory it admits >= 2x the concurrent requests (reported as
   `admissible_concurrent` / `kv_bytes`, plus measured peak occupancy and
   throughput on the same workload).
+* **mixed_placement** — a heterogeneous device placement on the MoE smoke
+  arch (analog attention on PCM + bit-serial MLP/experts on RRAM + digital
+  SRAM router, docs/device_models.md): records tok/s and the per-corner
+  uJ/token split. The corner split books *all* engine energy (including the
+  idle-slot share), so it sums to `engine_total_uj` = `total_uj` (per-request
+  billed) + `idle_uj`, not to `total_uj` alone.
 
 Writes a JSON report (tok/s, uJ/token, per-request energy spread) to --out.
 """
@@ -63,6 +69,7 @@ def run_workload(cfg, params, reqs, *, stagger, batch=None, max_len=None,
     eng._steps = 0
     eng.total_energy_pj = 0.0
     eng.idle_energy_pj = 0.0
+    eng.corner_energy_pj = {}
     eng.peak_concurrent = 0
     t0 = time.time()
     results = eng.serve(reqs, stagger=stagger)
@@ -132,6 +139,30 @@ def run_paged_compare(cfg, params, *, max_len=128, block_size=8, n_requests=16,
     return out
 
 
+def run_mixed_placement(*, arch="moonshot-v1-16b-a3b", n_requests=8,
+                        max_new=8, batch=4):
+    """Heterogeneous placement serving: per-corner energy split + tok/s."""
+    cfg = get_config(arch, smoke=True, placement="mixed")
+    cfg = cfg.replace(dtype=jnp.float32)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, batch_size=batch, max_len=16 + max_new)
+    rng = np.random.default_rng(3)
+    reqs = _requests(rng, cfg.vocab_size, n_requests, max_new, mixed=True)
+    out = {"arch": cfg.name, "placement": "mixed",
+           "corners": sorted(set(c for _, c, _ in cfg.placement_plan()))}
+    out.update(run_workload(cfg, params, reqs, stagger=2, eng=eng))
+    toks = out["tokens"]
+    # corner accounting covers every crossbar read the engine issued, idle
+    # rows included: sum(uj_by_corner) == engine_total_uj, not total_uj
+    out["engine_total_uj"] = round(eng.total_energy_pj * 1e-6, 4)
+    out["uj_per_token_by_corner"] = {
+        name: round(pj * 1e-6 / toks, 5)
+        for name, pj in sorted(eng.corner_energy_pj.items())}
+    out["uj_by_corner"] = {name: round(pj * 1e-6, 4)
+                           for name, pj in sorted(eng.corner_energy_pj.items())}
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
@@ -163,6 +194,8 @@ def main():
         batch=args.batch, max_len=max_len, stagger=args.stagger)
     report["paged_vs_contiguous"] = run_paged_compare(
         cfg, params, max_len=args.paged_max_len)
+    report["mixed_placement"] = run_mixed_placement(
+        n_requests=args.requests, max_new=args.max_new, batch=args.batch)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

@@ -1,28 +1,46 @@
-"""Continuous-batching serving example: EMT inference modes side by side.
+"""Continuous-batching serving example: EMT execution variants side by side.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py [--device CORNER]
+    PYTHONPATH=src python examples/serve_lm.py --placement mixed
 
 Submits staggered-arrival requests (one every other engine step, backfilling
-slots mid-decode) to the same checkpoint under ideal / analog / bit-serial
-execution and reports tokens/s + per-request EMT energy in uJ/token,
-demonstrating the paper's accuracy/energy/latency trade-off (Table 1
-structure) at serving time.  The engines run on the paged block-table KV
-cache (block_size=8): requests hold only the blocks their tokens occupy, so
-admission is gated on the free-block budget rather than max_len-sized slots.
+slots mid-decode) to the same checkpoint under ideal / analog / bit-serial /
+mixed-placement execution and reports tokens/s + per-request EMT energy in
+uJ/token, demonstrating the paper's accuracy/energy/latency trade-off
+(Table 1 structure) at serving time.  The engines run on the paged
+block-table KV cache (block_size=8): requests hold only the blocks their
+tokens occupy, so admission is gated on the free-block budget rather than
+max_len-sized slots.
+
+`--device` pins all layers to one registered technology corner; the default
+`mixed` variant is a heterogeneous placement (analog attention on PCM,
+bit-serial MLPs on RRAM — docs/device_models.md) whose resolved per-layer
+plan and per-corner energy split are printed.
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.report import corner_table
 from repro.configs import get_config
+from repro.launch.serve import print_plan
 from repro.models import lm
 from repro.nn.param import init_params
 from repro.serve.engine import ServingEngine, GenRequest
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device", default=None,
+                    help="single registered corner for the analog/bitserial "
+                         "variants (pcm, rram, mlc2, mlc4, sram_digital)")
+    ap.add_argument("--placement", default="mixed",
+                    help="placement preset for the heterogeneous variant")
+    args = ap.parse_args()
+
     rng = np.random.default_rng(0)
     base = get_config("gemma2-9b", emt_mode="ideal", smoke=True)
     base = base.replace(dtype=jnp.float32)
@@ -31,8 +49,13 @@ def main():
                for _ in range(4)]
 
     results = {}
-    for mode in ("ideal", "analog", "bitserial"):
-        cfg = get_config("gemma2-9b", emt_mode=mode, smoke=True)
+    for mode in ("ideal", "analog", "bitserial", "mixed"):
+        if mode == "mixed":
+            cfg = get_config("gemma2-9b", smoke=True,
+                             placement=args.placement)
+        else:
+            cfg = get_config("gemma2-9b", emt_mode=mode, smoke=True,
+                             device=args.device)
         cfg = cfg.replace(dtype=jnp.float32)
         # ideal config has no rho params; analog/bitserial reuse ideal weights
         p = params if mode == "ideal" else init_params(
@@ -63,6 +86,9 @@ def main():
         print(f"[{mode:9s}] {toks/dt:6.1f} tok/s  {uj_tok:8.4f} uJ/token  "
               f"kv-blocks free={free}/{eng.kv.pool_g.num_blocks}  "
               f"sample={res[0].tokens[:6].tolist()}")
+        if mode == "mixed":
+            print_plan(cfg)
+            print(corner_table(eng.corner_energy_pj, tokens=toks))
 
     # analog output should mostly agree with ideal at rho=4 (small fluctuation)
     agree = np.mean([np.mean(a == b) for a, b in

@@ -6,7 +6,8 @@
 """
 from __future__ import annotations
 
-from repro.configs.common import emt_preset, shrink
+from repro.configs.common import (emt_preset, shrink, placement_preset,
+                                  mixed_placement, PLACEMENTS)
 from repro.configs import (jamba_v0_1_52b, qwen2_vl_72b, moonshot_v1_16b_a3b,
                            llama4_scout_17b_a16e, xlstm_350m, deepseek_67b,
                            gemma3_1b, llama3_405b, gemma2_9b,
@@ -37,8 +38,26 @@ def arch_shapes(name: str):
     return shapes
 
 
-def get_config(name: str, *, emt_mode: str = "analog", rng: str = "hash",
-               intensity: str = "normal", smoke: bool = False, **emt_kw):
+def get_config(name: str, *, emt_mode: str = None, rng: str = "hash",
+               intensity: str = None, smoke: bool = False,
+               placement=None, **emt_kw):
+    """`placement` (DevicePlacement, EMTConfig, or preset name from
+    configs.common.PLACEMENTS) replaces the single-corner emt_* preset —
+    passing any explicit emt knob alongside it is an error, not a silent
+    override. Without a placement, emt_mode/intensity default to
+    "analog"/"normal"."""
     mod = ARCHS[name]
-    emt = emt_preset(emt_mode, rng=rng, intensity=intensity, **emt_kw)
+    if placement is not None:
+        # a placement fully specifies mode/device/intensity per layer — don't
+        # silently drop conflicting single-corner knobs
+        knobs = dict(emt_mode=emt_mode, intensity=intensity, **emt_kw)
+        conflict = sorted(k for k, v in knobs.items() if v is not None)
+        if conflict:
+            raise ValueError(f"placement= overrides per-corner EMT settings; "
+                             f"drop {conflict}")
+        emt = placement_preset(placement, rng=rng) \
+            if isinstance(placement, str) else placement
+    else:
+        emt = emt_preset(emt_mode or "analog", rng=rng,
+                         intensity=intensity or "normal", **emt_kw)
     return mod.smoke(emt) if smoke else mod.build(emt)

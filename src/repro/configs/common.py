@@ -1,9 +1,10 @@
-"""Config helpers: EMT presets and smoke-scale reduction."""
+"""Config helpers: EMT presets, device placements, smoke-scale reduction."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core.emt_linear import EMTConfig, IDEAL
+from repro.core.placement import DevicePlacement, LayerRule, emt_for_corner
 from repro.core.quant import QuantConfig
 from repro.core.noise import NoiseConfig
 from repro.models.config import ModelConfig
@@ -12,20 +13,72 @@ from repro.models.config import ModelConfig
 def emt_preset(mode: str = "analog", rng: str = "hash",
                intensity: str = "normal", rho_init: float = 4.0,
                energy_accounting: str = "full",
-               store_int8: bool = False) -> EMTConfig:
-    """Standard EMT configuration used by training/serving/dry-run."""
+               store_int8: bool = False,
+               device: str | None = None) -> EMTConfig:
+    """Standard EMT configuration used by training/serving/dry-run.
+
+    `device` names a registered technology corner (core/device.py registry);
+    None keeps the paper's default (PCM-like) cell.
+    """
     if mode == "ideal":
         return IDEAL
-    from repro.core.device import DeviceModel
+    from repro.core.device import DeviceModel, get_device
+    dev = get_device(device) if device else DeviceModel()
     return EMTConfig(
         mode=mode,
         quant=QuantConfig(w_bits=8, a_bits=8, enabled=True),
         noise=NoiseConfig(backend=rng, granularity="per_step"),
-        device=DeviceModel(intensity=intensity),
+        device=dev.with_intensity(intensity),
         rho_init=rho_init,
         energy_accounting=energy_accounting,
         store_int8=store_int8,
+        corner=device or "",
     )
+
+
+def mixed_placement(rng: str = "hash") -> DevicePlacement:
+    """The worked mixed-technology example (docs/device_models.md): analog
+    attention on PCM, bit-serial MLPs/experts on RRAM, routers on digital
+    SRAM, everything else (SSM/xLSTM projections, unembed) analog PCM."""
+    noise = NoiseConfig(backend=rng, granularity="per_step")
+    pcm = emt_for_corner("pcm", "analog").replace(noise=noise)
+    rram_bs = emt_for_corner("rram", "bitserial").replace(noise=noise)
+    sram = emt_for_corner("sram_digital", "analog").replace(noise=noise)
+    return DevicePlacement(
+        rules=(
+            LayerRule("*/attn/*", pcm),
+            LayerRule("*/xattn/*", pcm),
+            LayerRule("*/mlp/*", rram_bs),
+            LayerRule("*/moe/experts", rram_bs),
+            LayerRule("*/moe/router", sram),
+        ),
+        default=pcm)
+
+
+def placement_preset(name: str, rng: str = "hash") -> DevicePlacement:
+    """Named placement presets for --placement flags."""
+    noise = NoiseConfig(backend=rng, granularity="per_step")
+    if name == "mixed":
+        return mixed_placement(rng)
+    if name == "attn-pcm":
+        # fragile everything-else digital, attention analog (Joshi-style
+        # analog/digital split)
+        return DevicePlacement(
+            rules=(LayerRule("*/attn/*",
+                             emt_for_corner("pcm", "analog").replace(noise=noise)),),
+            default=IDEAL)
+    if name == "digital-router":
+        # one global analog config, routers pinned to the digital corner
+        return DevicePlacement(
+            rules=(LayerRule("*/moe/router",
+                             emt_for_corner("sram_digital", "analog")
+                             .replace(noise=noise)),),
+            default=emt_preset("analog", rng=rng))
+    raise KeyError(f"unknown placement preset {name!r}; "
+                   f"known: {sorted(PLACEMENTS)}")
+
+
+PLACEMENTS = ("mixed", "attn-pcm", "digital-router")
 
 
 def shrink(cfg: ModelConfig, **overrides) -> ModelConfig:

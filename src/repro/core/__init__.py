@@ -1,6 +1,13 @@
 """Core: the paper's contribution — EMT device model + techniques A/B/C."""
-from repro.core.device import DeviceModel, DEFAULT_DEVICE, four_state_device, INTENSITY_SCALE
+from repro.core.device import (DeviceModel, DEFAULT_DEVICE, four_state_device,
+                               INTENSITY_SCALE, register_device, get_device,
+                               device_names)
 from repro.core.noise import NoiseConfig, fluctuate
 from repro.core.quant import QuantConfig, fake_quant, quant_levels
 from repro.core.emt_linear import EMTConfig, IDEAL, emt_dense, dense_specs, new_aux, add_aux
+from repro.core.placement import (LayerRule, DevicePlacement, as_placement,
+                                  single, emt_for_corner, placement_to_dict,
+                                  placement_from_dict, emt_to_dict,
+                                  emt_from_dict, device_to_dict,
+                                  device_from_dict)
 from repro.core import decompose, regularizer, hashrng

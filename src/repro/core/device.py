@@ -114,3 +114,56 @@ def four_state_device(**kw) -> DeviceModel:
 
 
 DEFAULT_DEVICE = DeviceModel()
+
+
+# ---------------------------------------------------------------------------
+# technology-corner registry
+# ---------------------------------------------------------------------------
+# Named device corners for heterogeneous placement (docs/device_models.md).
+# Parameters are anchored to the paper's model shape (§3, Fig. 2) and the cited
+# device literature, not to one measured chip:
+#
+# * pcm  — phase-change memory, the paper's reference cell (Ielmini et al. [25]
+#   RTN amplitude/rho trend): the DEFAULT_DEVICE parameters.
+# * rram — filamentary RRAM: stronger RTN at equal programming energy
+#   (larger amplitude, slightly weaker rho suppression) but cheaper reads.
+# * mlc2 / mlc4 — multi-level-cell corners: 2-state vs 4-state RTN; the
+#   4-state corner models a cell whose traps expose intermediate levels.
+# * sram_digital — digital CMOS fallback (SRAM-CiM): deterministic reads
+#   (amplitude 0 — quantization still applies), MAC energy dominated by the
+#   digital adder tree rather than rho-scaled cell current.
+_REGISTRY = {
+    "default": DEFAULT_DEVICE,
+    "pcm": DeviceModel(amplitude=0.08, beta=0.5, e_mac=0.05, e_read=0.4),
+    "rram": DeviceModel(amplitude=0.12, beta=0.4, e_mac=0.03, e_read=0.25),
+    "mlc2": DeviceModel(amplitude=0.10, beta=0.5, e_mac=0.06, e_read=0.45),
+    "mlc4": four_state_device(amplitude=0.10, beta=0.5, e_mac=0.06,
+                              e_read=0.45),
+    "sram_digital": DeviceModel(amplitude=0.0, beta=0.5, e_mac=0.02,
+                                e_read=0.08),
+}
+
+
+def register_device(name: str, model: DeviceModel,
+                    overwrite: bool = False) -> DeviceModel:
+    """Register a user-defined technology corner under `name`."""
+    if not isinstance(model, DeviceModel):
+        raise TypeError(f"expected DeviceModel, got {type(model).__name__}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"device corner {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[name] = model
+    return model
+
+
+def get_device(name: str) -> DeviceModel:
+    """Look up a registered technology corner by name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown device corner {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def device_names():
+    return sorted(_REGISTRY)

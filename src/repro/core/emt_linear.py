@@ -53,10 +53,21 @@ class EMTConfig:
     # scale (exactly the conductance levels an EMT crossbar stores) and dequantize
     # on-chip — halves weight HBM streaming for memory-bound decode. Serve-only.
     store_int8: bool = False
+    # Technology-corner label (core/device.py registry) — stamps this layer's
+    # energy/reads/cells into the per-corner aux breakdown. Empty: fall back
+    # to the mode name.
+    corner: str = ""
 
     @property
     def active(self) -> bool:
         return self.mode != "ideal"
+
+    @property
+    def corner_label(self) -> str:
+        return self.corner or self.mode
+
+    def replace(self, **kw) -> "EMTConfig":
+        return dataclasses.replace(self, **kw)
 
 
 IDEAL = EMTConfig(mode="ideal", quant=QuantConfig(enabled=False))
@@ -126,11 +137,26 @@ def quantize_tree_for_serving(params):
 def new_aux():
     return {"energy_pj": jnp.float32(0.0), "reg": jnp.float32(0.0),
             "reads": jnp.float32(0.0), "cells": 0, "rho_sum": jnp.float32(0.0),
-            "rho_layers": 0, "aux_loss": jnp.float32(0.0)}
+            "rho_layers": 0, "aux_loss": jnp.float32(0.0), "corners": {}}
+
+
+def corner_entry(energy_pj, reads, cells):
+    return {"energy_pj": jnp.float32(energy_pj), "reads": jnp.float32(reads),
+            "cells": cells}
 
 
 def add_aux(a, b):
-    return {k: a[k] + b[k] for k in a}
+    out = {k: a[k] + b[k] for k in a if k != "corners"}
+    # per-corner breakdown: union-merge (corner labels are static python
+    # strings from the placement, so the pytree structure stays jit-stable)
+    corners = {k: dict(v) for k, v in a.get("corners", {}).items()}
+    for name, c in b.get("corners", {}).items():
+        if name in corners:
+            corners[name] = {k: corners[name][k] + c[k] for k in c}
+        else:
+            corners[name] = dict(c)
+    out["corners"] = corners
+    return out
 
 
 def _tokens(x) -> int:
@@ -170,7 +196,11 @@ def emt_dense(params: dict, x, cfg: EMTConfig, *, tag: str,
     else:
         wq, _ = quantize_weights(w, cfg.quant)
     # --- activations onto the input lines: quantized DAC levels -------------
-    levels, a_scale = quant_levels(x, cfg.quant.a_bits)
+    # per_row: each batch row (token) gets its own DAC scale, so quantization
+    # never couples co-tenant rows (occupancy-independent serving); per-tensor
+    # is the paper's default and marginally cheaper.
+    a_axis = -1 if cfg.quant.a_per_row else None
+    levels, a_scale = quant_levels(x, cfg.quant.a_bits, axis=a_axis)
 
     n_tokens = _tokens(x)
     if cfg.mode == "analog":
@@ -208,6 +238,7 @@ def emt_dense(params: dict, x, cfg: EMTConfig, *, tag: str,
 
     if cfg.energy_accounting == "off":
         aux["cells"] = int(d_in * d_out)
+        aux["corners"] = {cfg.corner_label: corner_entry(0.0, 0.0, aux["cells"])}
         return y, aux
 
     # --- accounting ----------------------------------------------------------
@@ -226,4 +257,6 @@ def emt_dense(params: dict, x, cfg: EMTConfig, *, tag: str,
     aux["cells"] = int(d_in * d_out)
     aux["rho_sum"] = rho_sg
     aux["rho_layers"] = 1
+    aux["corners"] = {cfg.corner_label: corner_entry(
+        aux["energy_pj"], aux["reads"], aux["cells"])}
     return y, aux

@@ -1,0 +1,203 @@
+"""Heterogeneous device placement — per-layer EMT technology corners.
+
+The paper's premise is that EMT read instability and energy cost are device-
+and layer-dependent (§5.1: the peripheral ``e_read`` term makes small-fan-in
+layers inefficient; §5.2 sweeps weak/normal/strong corners).  A single global
+``EMTConfig`` cannot express "attention on PCM, MLPs bit-serial on RRAM,
+router digital", so model configs may instead carry a :class:`DevicePlacement`:
+an ordered list of :class:`LayerRule` glob patterns over canonical layer paths,
+resolved **at model-build time** into a static per-layer plan — jit still sees
+only closed-over frozen dataclasses, exactly as with one global config.
+
+Canonical layer paths (see docs/device_models.md):
+
+    dec/layer_007/attn/{wq,wk,wv,wo}     attention projections
+    dec/layer_007/xattn/{wq,wk,wv,wo}    enc-dec cross attention
+    dec/layer_007/mlp/{wg,wu,wd}         dense GLU FFN
+    dec/layer_007/moe/experts            stacked expert weights (one unit)
+    dec/layer_007/moe/router             router (digital unless explicitly placed)
+    dec/layer_007/mamba/{in,xp,dt,out}   SSM projections
+    dec/layer_007/mlstm/{up,wq,wk,wv,wi,wf,down}
+    dec/layer_007/slstm/{wz,wi,wf,wo,up,down}
+    enc/layer_003/...                    encoder stack (enc-dec models)
+    unembed                              LM head (tied or untied)
+    s0b1/{c1,c2,proj}, head              CNN stages (models/cnn.py)
+
+Rules are **first-match-wins**; unmatched paths fall back to ``default``.  A
+plain ``EMTConfig`` auto-wraps into a zero-rule placement (:func:`as_placement`)
+so every existing config, checkpoint, and call site keeps working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import functools
+from typing import Optional, Tuple, Union
+
+from repro.core.device import DeviceModel, get_device
+from repro.core.emt_linear import EMTConfig, IDEAL
+from repro.core.noise import NoiseConfig
+from repro.core.quant import QuantConfig
+
+
+def emt_for_corner(corner: str, mode: str = "analog", *,
+                   intensity: str = "normal", rho_init: float = 4.0,
+                   trainable_rho: Optional[bool] = None,
+                   **kw) -> EMTConfig:
+    """Build an EMTConfig on a registered technology corner.
+
+    ``mode="ideal"`` returns a corner-labelled ideal config (digital fallback
+    with no quantization). Unknown corner names raise ``KeyError``.
+    """
+    device = get_device(corner)            # raises KeyError on unknown corner
+    if mode == "ideal":
+        return EMTConfig(mode="ideal", quant=QuantConfig(enabled=False),
+                         device=device, corner=corner)
+    if trainable_rho is None:
+        # a deterministic (amplitude-0) digital corner has no accuracy/energy
+        # trade-off for rho gradients to navigate
+        trainable_rho = device.amplitude > 0
+    return EMTConfig(
+        mode=mode,
+        quant=QuantConfig(w_bits=8, a_bits=8, enabled=True),
+        noise=NoiseConfig(backend="hash", granularity="per_step"),
+        device=device.with_intensity(intensity),
+        rho_init=rho_init,
+        trainable_rho=trainable_rho,
+        corner=corner,
+        **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRule:
+    """Glob `pattern` over canonical layer paths -> `emt` config."""
+    pattern: str
+    emt: EMTConfig
+
+    def matches(self, path: str) -> bool:
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+    @property
+    def corner(self) -> str:
+        return self.emt.corner or self.emt.mode
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePlacement:
+    """Ordered first-match-wins rules + a default for unmatched paths."""
+    rules: Tuple[LayerRule, ...] = ()
+    default: EMTConfig = IDEAL
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        for r in self.rules:
+            if not isinstance(r, LayerRule):
+                raise TypeError(f"rules must be LayerRule, got {type(r).__name__}")
+
+    # ---- resolution --------------------------------------------------------
+    def match(self, path: str) -> Optional[EMTConfig]:
+        """First explicit rule matching `path`, or None (default NOT applied).
+
+        Used for sites that are digital unless placed (the MoE router)."""
+        for rule in self.rules:
+            if rule.matches(path):
+                return rule.emt
+        return None
+
+    def resolve(self, path: str) -> EMTConfig:
+        """Per-layer config for `path`: first matching rule, else the default."""
+        hit = self.match(path)
+        return self.default if hit is None else hit
+
+    # ---- conveniences ------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return self.default.active or any(r.emt.active for r in self.rules)
+
+    @property
+    def mode(self) -> str:
+        """Representative mode (the default's) — display/back-compat only."""
+        return self.default.mode
+
+    def corners(self) -> Tuple[str, ...]:
+        """All corner labels this placement can book energy under."""
+        seen = []
+        for emt in [r.emt for r in self.rules] + [self.default]:
+            label = emt.corner or emt.mode
+            if label not in seen:
+                seen.append(label)
+        return tuple(seen)
+
+
+def single(emt: EMTConfig) -> DevicePlacement:
+    """Wrap one global EMTConfig as a zero-rule placement (old behavior)."""
+    return DevicePlacement(rules=(), default=emt)
+
+
+@functools.lru_cache(maxsize=None)
+def _coerce(emt) -> DevicePlacement:
+    return emt if isinstance(emt, DevicePlacement) else single(emt)
+
+
+def as_placement(emt: Union[EMTConfig, DevicePlacement]) -> DevicePlacement:
+    """Normalize an `emt` field (EMTConfig or DevicePlacement) to a placement."""
+    if not isinstance(emt, (EMTConfig, DevicePlacement)):
+        raise TypeError(f"emt must be EMTConfig or DevicePlacement, "
+                        f"got {type(emt).__name__}")
+    return _coerce(emt)
+
+
+# ---------------------------------------------------------------------------
+# dict serialization (checkpoint `extra` metadata — ckpt/checkpoint.py)
+# ---------------------------------------------------------------------------
+def device_to_dict(dev: DeviceModel) -> dict:
+    return {f.name: getattr(dev, f.name)
+            for f in dataclasses.fields(DeviceModel)}
+
+
+def device_from_dict(d: dict) -> DeviceModel:
+    known = {f.name for f in dataclasses.fields(DeviceModel)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"unknown DeviceModel fields {sorted(unknown)}")
+    d = dict(d)
+    for k in ("state_offsets", "state_probs"):
+        if k in d:
+            d[k] = tuple(d[k])
+    return DeviceModel(**d)
+
+
+def emt_to_dict(emt: EMTConfig) -> dict:
+    d = {f.name: getattr(emt, f.name) for f in dataclasses.fields(EMTConfig)}
+    d["quant"] = dataclasses.asdict(emt.quant)
+    d["noise"] = dataclasses.asdict(emt.noise)
+    d["device"] = device_to_dict(emt.device)
+    return d
+
+
+def emt_from_dict(d: dict) -> EMTConfig:
+    d = dict(d)
+    if "quant" in d:
+        d["quant"] = QuantConfig(**d["quant"])
+    if "noise" in d:
+        d["noise"] = NoiseConfig(**d["noise"])
+    if "device" in d:
+        dev = d["device"]
+        # a string refers to a registered corner (KeyError if unknown);
+        # a dict carries the full parameters inline
+        d["device"] = get_device(dev) if isinstance(dev, str) \
+            else device_from_dict(dev)
+    return EMTConfig(**d)
+
+
+def placement_to_dict(p: Union[EMTConfig, DevicePlacement]) -> dict:
+    p = as_placement(p)
+    return {"rules": [{"pattern": r.pattern, "emt": emt_to_dict(r.emt)}
+                      for r in p.rules],
+            "default": emt_to_dict(p.default)}
+
+
+def placement_from_dict(d: dict) -> DevicePlacement:
+    rules = tuple(LayerRule(r["pattern"], emt_from_dict(r["emt"]))
+                  for r in d.get("rules", ()))
+    return DevicePlacement(rules=rules, default=emt_from_dict(d["default"]))

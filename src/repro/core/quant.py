@@ -21,6 +21,13 @@ class QuantConfig:
     enabled: bool = True
     # per-channel scales for weights (last dim), per-tensor for activations
     per_channel: bool = True
+    # Per-row (per-sample) activation DAC scale instead of per-tensor: each
+    # token's input-line levels are scaled by its own max, so quantization
+    # never couples co-tenant batch rows.  The per-tensor default is the
+    # paper's model (one shared DAC reference per array read) but makes token
+    # streams occupancy-sensitive at the LSB in serving (ROADMAP "Known
+    # subtlety"); enable this for occupancy-independent analog serving.
+    a_per_row: bool = False
 
 
 def _ste(x, q):

@@ -5,6 +5,14 @@ inference.
         --requests 8 --stagger 2 --temperature 0.8 --top-k 40
 
 Flags (new continuous-batching engine):
+    --device NAME      run every layer on one registered technology corner
+                       (core/device.py registry: pcm, rram, mlc2, mlc4,
+                       sram_digital, ...)
+    --placement NAME   heterogeneous per-layer placement preset (configs
+                       PLACEMENTS, e.g. `mixed`: analog attention on PCM +
+                       bit-serial MLPs on RRAM + digital routers); prints the
+                       resolved per-layer plan at startup and a per-corner
+                       energy report at the end (docs/device_models.md)
     --requests N       total requests to serve (queue beyond --batch backfills)
     --stagger K        submit a new request every K engine steps (0 = all at
                        once, i.e. lockstep-equivalent arrival)
@@ -29,10 +37,25 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCHS, get_config
+from repro.configs import ARCHS, PLACEMENTS, get_config
 from repro.models import lm
 from repro.nn.param import init_params
 from repro.serve.engine import ServingEngine, GenRequest, prefill_bucket
+
+
+def print_plan(cfg):
+    """Resolved per-layer device plan, grouped into runs of equal corners."""
+    plan = cfg.placement_plan()
+    print(f"device plan ({len(plan)} placement sites):")
+    run = []
+    for path, corner, mode in plan + (("", "", ""),):
+        if run and (corner, mode) != (run[0][1], run[0][2]):
+            first, last = run[0][0], run[-1][0]
+            span = first if len(run) == 1 else f"{first} .. {last}"
+            print(f"  {span:56s} -> {run[0][1]} ({run[0][2]}) x{len(run)}")
+            run = []
+        if path:
+            run.append((path, corner, mode))
 
 
 def main():
@@ -41,6 +64,13 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--mode", default="analog",
                     choices=["ideal", "analog", "bitserial"])
+    ap.add_argument("--device", default=None,
+                    help="registered technology corner for all layers "
+                         "(pcm, rram, mlc2, mlc4, sram_digital, ...)")
+    ap.add_argument("--placement", default=None, choices=list(PLACEMENTS),
+                    help="heterogeneous per-layer placement preset "
+                         "(overrides --mode/--device: the placement names "
+                         "mode and corner per layer)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=0,
                     help="total requests (default: --batch)")
@@ -60,10 +90,19 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=None)
     ap.add_argument("--kv-ring-blocks", type=int, default=None)
     args = ap.parse_args()
+    if args.placement and args.device:
+        ap.error("--placement and --device are mutually exclusive "
+                 "(a placement names its corners per layer)")
 
     import jax.numpy as jnp
-    cfg = get_config(args.arch, emt_mode=args.mode, smoke=args.smoke)
+    if args.placement:
+        cfg = get_config(args.arch, smoke=args.smoke,
+                         placement=args.placement)
+    else:
+        cfg = get_config(args.arch, emt_mode=args.mode, smoke=args.smoke,
+                         device=args.device)
     cfg = cfg.replace(dtype=jnp.float32)
+    print_plan(cfg)
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     n_req = args.requests or args.batch
     eng = ServingEngine(cfg, params, batch_size=args.batch,
@@ -93,6 +132,10 @@ def main():
         per_tok = r.energy_pj * 1e-6 / max(len(r.tokens), 1)
         print(f"  req{r.rid}: {len(r.tokens)} toks, {per_tok:.4f} uJ/token, "
               f"{r.done_reason}: {r.tokens[:6].tolist()}")
+    if eng.corner_energy_pj:
+        from repro.analysis.report import corner_table
+        print("per-corner energy:")
+        print(corner_table(eng.corner_energy_pj, tokens=tok_count))
 
 
 if __name__ == "__main__":

@@ -38,6 +38,11 @@ def main():
     ap.add_argument("--lam", type=float, default=1e-6)
     ap.add_argument("--emt-mode", default="analog",
                     choices=["ideal", "analog", "bitserial"])
+    ap.add_argument("--device", default=None,
+                    help="registered technology corner for all layers")
+    ap.add_argument("--placement", default=None,
+                    help="heterogeneous per-layer placement preset "
+                         "(configs PLACEMENTS; overrides --emt-mode/--device)")
     ap.add_argument("--rng", default="hash", choices=["hash", "threefry"])
     ap.add_argument("--rules", default="train_fsdp_tp", choices=list(RULES))
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
@@ -45,9 +50,19 @@ def main():
     ap.add_argument("--opt", default="adamw",
                     choices=["adamw", "sgd", "adafactor"])
     args = ap.parse_args()
+    if args.placement and args.device:
+        ap.error("--placement and --device are mutually exclusive "
+                 "(a placement names its corners per layer)")
 
-    cfg = get_config(args.arch, emt_mode=args.emt_mode, rng=args.rng,
-                     smoke=args.smoke)
+    if args.placement:
+        cfg = get_config(args.arch, rng=args.rng, smoke=args.smoke,
+                         placement=args.placement)
+    else:
+        cfg = get_config(args.arch, emt_mode=args.emt_mode, rng=args.rng,
+                         smoke=args.smoke, device=args.device)
+    if args.placement:
+        from repro.launch.serve import print_plan
+        print_plan(cfg)
     if args.smoke:
         cfg = cfg.replace(dtype=jnp.float32)
     mesh = make_host_mesh()

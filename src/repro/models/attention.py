@@ -14,13 +14,19 @@ from repro.models.config import ModelConfig
 from repro.models.context import Ctx
 
 
-def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+def attention_specs(cfg: ModelConfig, cross: bool = False, tag: str = "") -> dict:
+    """`tag` is the block's canonical path (e.g. "dec/layer_007/attn") — each
+    projection resolves its own EMT corner through the placement."""
     D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     specs = {
-        "wq": dense_specs(D, H * hd, cfg.emt, axes=("embed", "heads"), dtype=cfg.dtype),
-        "wk": dense_specs(D, KV * hd, cfg.emt, axes=("embed", "heads"), dtype=cfg.dtype),
-        "wv": dense_specs(D, KV * hd, cfg.emt, axes=("embed", "heads"), dtype=cfg.dtype),
-        "wo": dense_specs(H * hd, D, cfg.emt, axes=("heads", "embed"), dtype=cfg.dtype),
+        "wq": dense_specs(D, H * hd, cfg.emt_at(f"{tag}/wq"),
+                          axes=("embed", "heads"), dtype=cfg.dtype),
+        "wk": dense_specs(D, KV * hd, cfg.emt_at(f"{tag}/wk"),
+                          axes=("embed", "heads"), dtype=cfg.dtype),
+        "wv": dense_specs(D, KV * hd, cfg.emt_at(f"{tag}/wv"),
+                          axes=("embed", "heads"), dtype=cfg.dtype),
+        "wo": dense_specs(H * hd, D, cfg.emt_at(f"{tag}/wo"),
+                          axes=("heads", "embed"), dtype=cfg.dtype),
     }
     if cfg.qk_norm:
         specs["qnorm"] = common.rmsnorm_specs(hd)
@@ -31,11 +37,14 @@ def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
 def _project_qkv(params, xq, xkv, cfg: ModelConfig, ctx: Ctx, tag: str):
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     aux = new_aux()
-    q, a = emt_dense(params["wq"], xq, cfg.emt, tag=f"{tag}/wq", seed=ctx.seed, key=ctx.key)
+    q, a = emt_dense(params["wq"], xq, cfg.emt_at(f"{tag}/wq"), tag=f"{tag}/wq",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
-    k, a = emt_dense(params["wk"], xkv, cfg.emt, tag=f"{tag}/wk", seed=ctx.seed, key=ctx.key)
+    k, a = emt_dense(params["wk"], xkv, cfg.emt_at(f"{tag}/wk"), tag=f"{tag}/wk",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
-    v, a = emt_dense(params["wv"], xkv, cfg.emt, tag=f"{tag}/wv", seed=ctx.seed, key=ctx.key)
+    v, a = emt_dense(params["wv"], xkv, cfg.emt_at(f"{tag}/wv"), tag=f"{tag}/wv",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     q = q.reshape(*xq.shape[:-1], H, hd)
     k = k.reshape(*xkv.shape[:-1], KV, hd)
@@ -257,8 +266,8 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             k, v = k_cache, v_cache
 
     y = _gqa_core(q, k, v, mask, cfg, ctx)
-    o, a = emt_dense(params["wo"], y, cfg.emt, tag=f"{tag}/wo", seed=ctx.seed,
-                     key=ctx.key)
+    o, a = emt_dense(params["wo"], y, cfg.emt_at(f"{tag}/wo"), tag=f"{tag}/wo",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     return o, aux, new_cache
 
@@ -273,7 +282,8 @@ def cross_attention(params, x, cfg: ModelConfig, *, enc_out=None, enc_mask=None,
     never appended, so the table is read-only here)."""
     aux = new_aux()
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q, a = emt_dense(params["wq"], x, cfg.emt, tag=f"{tag}/wq", seed=ctx.seed, key=ctx.key)
+    q, a = emt_dense(params["wq"], x, cfg.emt_at(f"{tag}/wq"), tag=f"{tag}/wq",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     q = q.reshape(*x.shape[:-1], H, hd)
     if enc_out is None and cache is not None and "ck" in cache:
@@ -284,17 +294,17 @@ def cross_attention(params, x, cfg: ModelConfig, *, enc_out=None, enc_mask=None,
             k, v = cache["ck"], cache["cv"]
         new_cache = None
     else:
-        k, a = emt_dense(params["wk"], enc_out, cfg.emt, tag=f"{tag}/wk",
-                         seed=ctx.seed, key=ctx.key)
+        k, a = emt_dense(params["wk"], enc_out, cfg.emt_at(f"{tag}/wk"),
+                         tag=f"{tag}/wk", seed=ctx.seed, key=ctx.key)
         aux = add_aux(aux, a)
-        v, a = emt_dense(params["wv"], enc_out, cfg.emt, tag=f"{tag}/wv",
-                         seed=ctx.seed, key=ctx.key)
+        v, a = emt_dense(params["wv"], enc_out, cfg.emt_at(f"{tag}/wv"),
+                         tag=f"{tag}/wv", seed=ctx.seed, key=ctx.key)
         aux = add_aux(aux, a)
         k = k.reshape(*enc_out.shape[:-1], KV, hd)
         v = v.reshape(*enc_out.shape[:-1], KV, hd)
         new_cache = {"ck": k, "cv": v}
     y = _gqa_core(q, k, v, enc_mask, cfg, ctx)
-    o, a = emt_dense(params["wo"], y, cfg.emt, tag=f"{tag}/wo", seed=ctx.seed,
-                     key=ctx.key)
+    o, a = emt_dense(params["wo"], y, cfg.emt_at(f"{tag}/wo"), tag=f"{tag}/wo",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     return o, aux, new_cache

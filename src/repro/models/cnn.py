@@ -12,13 +12,14 @@ Normalization is LayerNorm (stateless) instead of BatchNorm — documented devia
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.emt_linear import EMTConfig, emt_dense, dense_specs, new_aux, add_aux
+from repro.core.placement import DevicePlacement, as_placement
 from repro.nn.param import ParamSpec, ones_init, constant_init
 from repro.models.context import Ctx
 
@@ -32,8 +33,17 @@ class CNNConfig:
     num_classes: int = 10
     image_size: int = 32
     in_channels: int = 3
-    emt: EMTConfig = EMTConfig()
+    # one global EMTConfig or a DevicePlacement over paths s{i}b{j}/{c1,c2,proj}
+    # and "head" (core/placement.py)
+    emt: Union[EMTConfig, DevicePlacement] = EMTConfig()
     dtype: type = jnp.float32
+
+    @property
+    def placement(self) -> DevicePlacement:
+        return as_placement(self.emt)
+
+    def emt_at(self, path: str) -> EMTConfig:
+        return self.placement.resolve(path)
 
 
 def _patches(x, k, stride=1):
@@ -77,15 +87,17 @@ def specs(cfg: CNNConfig) -> dict:
     for si, c in enumerate(cfg.channels):
         for bi in range(cfg.blocks_per_stage):
             name = f"s{si}b{bi}"
-            s[name] = {"conv1": conv_specs(cin if bi == 0 else c, c, cfg.emt),
+            s[name] = {"conv1": conv_specs(cin if bi == 0 else c, c,
+                                           cfg.emt_at(f"{name}/c1")),
                        "ln1": layernorm_specs(c),
-                       "conv2": conv_specs(c, c, cfg.emt),
+                       "conv2": conv_specs(c, c, cfg.emt_at(f"{name}/c2")),
                        "ln2": layernorm_specs(c)}
             if cfg.arch == "resnet" and bi == 0 and cin != c:
-                s[name]["proj"] = conv_specs(cin, c, cfg.emt, k=1)
+                s[name]["proj"] = conv_specs(cin, c,
+                                             cfg.emt_at(f"{name}/proj"), k=1)
             cin = c
-    s["head"] = dense_specs(cfg.channels[-1], cfg.num_classes, cfg.emt,
-                            bias=True)
+    s["head"] = dense_specs(cfg.channels[-1], cfg.num_classes,
+                            cfg.emt_at("head"), bias=True)
     return s
 
 
@@ -97,17 +109,19 @@ def forward(params, x, cfg: CNNConfig, ctx: Ctx):
         for bi in range(cfg.blocks_per_stage):
             name = f"s{si}b{bi}"
             p = params[name]
-            y, a = emt_conv(p["conv1"], h, cfg.emt, tag=f"{name}/c1", ctx=ctx)
+            y, a = emt_conv(p["conv1"], h, cfg.emt_at(f"{name}/c1"),
+                            tag=f"{name}/c1", ctx=ctx)
             aux = add_aux(aux, a)
             y = jax.nn.relu(layernorm(p["ln1"], y))
-            y2, a = emt_conv(p["conv2"], y, cfg.emt, tag=f"{name}/c2", ctx=ctx)
+            y2, a = emt_conv(p["conv2"], y, cfg.emt_at(f"{name}/c2"),
+                             tag=f"{name}/c2", ctx=ctx)
             aux = add_aux(aux, a)
             y2 = layernorm(p["ln2"], y2)
             if cfg.arch == "resnet":
                 skip = h
                 if "proj" in p:
-                    skip, a = emt_conv(p["proj"], h, cfg.emt, k=1,
-                                       tag=f"{name}/proj", ctx=ctx)
+                    skip, a = emt_conv(p["proj"], h, cfg.emt_at(f"{name}/proj"),
+                                       k=1, tag=f"{name}/proj", ctx=ctx)
                     aux = add_aux(aux, a)
                 if skip.shape == y2.shape:
                     y2 = y2 + skip
@@ -116,8 +130,8 @@ def forward(params, x, cfg: CNNConfig, ctx: Ctx):
         B, H, W, C = h.shape
         h = h.reshape(B, H // 2, 2, W // 2, 2, C).mean((2, 4))
     h = h.mean((1, 2))                                   # global average pool
-    logits, a = emt_dense(params["head"], h, cfg.emt, tag="head", seed=ctx.seed,
-                          key=ctx.key)
+    logits, a = emt_dense(params["head"], h, cfg.emt_at("head"), tag="head",
+                          seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     return logits.astype(jnp.float32), aux
 

@@ -2,11 +2,15 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
 from repro.core.emt_linear import EMTConfig, IDEAL
+from repro.core.placement import DevicePlacement, as_placement
+
+# block kinds that are attention layers (single source; stack.py re-exports)
+ATTN_KINDS = ("attn", "global", "local")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,7 +67,10 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
 
     # --- EMT (the paper's technique) -----------------------------------------
-    emt: EMTConfig = IDEAL
+    # Either one global EMTConfig (auto-wrapped into a zero-rule placement)
+    # or a DevicePlacement mapping canonical layer paths to per-layer corners
+    # (core/placement.py; docs/device_models.md).
+    emt: Union[EMTConfig, DevicePlacement] = IDEAL
 
     # --- runtime --------------------------------------------------------------
     remat: bool = True               # jax.checkpoint around each block
@@ -95,6 +102,78 @@ class ModelConfig:
             return tuple(False for _ in range(self.num_layers))
         return tuple((i % self.moe_every) == (self.moe_every - 1)
                      for i in range(self.num_layers))
+
+    # --- heterogeneous device placement --------------------------------------
+    @property
+    def placement(self) -> DevicePlacement:
+        return as_placement(self.emt)
+
+    def emt_at(self, path: str) -> EMTConfig:
+        """Resolved per-layer EMT config for a canonical layer path."""
+        return self.placement.resolve(path)
+
+    def emt_rule_at(self, path: str) -> Optional[EMTConfig]:
+        """Explicit-rule-only resolution (None unless a rule matches) — for
+        sites that stay digital unless placed, e.g. the MoE router."""
+        return self.placement.match(path)
+
+    def layer_paths(self) -> Tuple[str, ...]:
+        """All canonical placement paths of this model, build order."""
+        attn_kinds = ATTN_KINDS
+        paths = []
+
+        def stack_paths(prefix, kinds, moe_mask, cross):
+            for i, kind in enumerate(kinds):
+                base = f"{prefix}/layer_{i:03d}"
+                if kind in attn_kinds:
+                    paths.extend(f"{base}/attn/{w}"
+                                 for w in ("wq", "wk", "wv", "wo"))
+                elif kind == "mamba":
+                    paths.extend(f"{base}/mamba/{w}"
+                                 for w in ("in", "xp", "dt", "out"))
+                elif kind == "mlstm":
+                    paths.extend(f"{base}/mlstm/{w}" for w in
+                                 ("up", "wq", "wk", "wv", "wi", "wf", "down"))
+                    continue                    # self-contained, no FFN
+                elif kind == "slstm":
+                    paths.extend(f"{base}/slstm/{w}" for w in
+                                 ("wz", "wi", "wf", "wo", "up", "down"))
+                    continue
+                if cross:
+                    # mirrors stack.block_specs: every non-self-contained
+                    # block kind carries xattn specs in an enc-dec stack
+                    paths.extend(f"{base}/xattn/{w}"
+                                 for w in ("wq", "wk", "wv", "wo"))
+                if moe_mask[i]:
+                    paths.append(f"{base}/moe/experts")
+                    paths.append(f"{base}/moe/router")
+                elif self.d_ff > 0:
+                    paths.extend(f"{base}/mlp/{w}" for w in ("wg", "wu", "wd"))
+
+        if self.is_encdec:
+            stack_paths("enc", tuple("attn" for _ in range(self.encoder_layers)),
+                        tuple(False for _ in range(self.encoder_layers)), False)
+        stack_paths("dec", self.blocks(), self.moe_layer_mask(), self.is_encdec)
+        paths.append("unembed")
+        return tuple(paths)
+
+    def placement_plan(self) -> Tuple[Tuple[str, str, str], ...]:
+        """Resolved (path, corner, mode) triples — the static per-layer plan.
+
+        Router paths report what moe_specs/moe_ffn actually do: digital fp32
+        unless an explicit rule places them (the default never applies)."""
+        plan = []
+        for p in self.layer_paths():
+            if p.endswith("/moe/router"):
+                hit = self.emt_rule_at(p)
+                if hit is None:
+                    plan.append((p, "digital", "fp32"))
+                    continue
+                plan.append((p, hit.corner_label, hit.mode))
+            else:
+                emt = self.emt_at(p)
+                plan.append((p, emt.corner_label, emt.mode))
+        return tuple(plan)
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

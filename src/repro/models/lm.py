@@ -36,22 +36,24 @@ def specs(cfg: ModelConfig) -> dict:
     s = {
         "embed": common.embedding_specs(cfg.vocab_size, cfg.d_model, cfg.dtype),
         "decoder": stk.stack_specs(cfg, cfg.num_layers, kinds, moe_mask,
-                                   cross=cfg.is_encdec),
+                                   cross=cfg.is_encdec, tag="dec"),
         "final_norm": common.rmsnorm_specs(cfg.d_model),
     }
+    head_emt = cfg.emt_at("unembed")
     if not cfg.tie_embeddings:
         s["lm_head"] = common.unembed_specs(cfg.d_model, cfg.vocab_size,
-                                            cfg.emt, cfg.dtype)
-    elif cfg.emt.active:
+                                            head_emt, cfg.dtype)
+    elif head_emt.active:
         # tied table reused as the crossbar — still needs its energy coefficient
         from repro.nn.param import ParamSpec, constant_init
         s["lm_head"] = {"rho_raw": ParamSpec(
             (), jnp.float32, (),
-            constant_init(regularizer.rho_init_raw(cfg.emt.rho_init)))}
+            constant_init(regularizer.rho_init_raw(head_emt.rho_init)))}
     if cfg.is_encdec:
         enc_kinds = tuple("attn" for _ in range(cfg.encoder_layers))
         enc_moe = tuple(False for _ in range(cfg.encoder_layers))
-        s["encoder"] = stk.stack_specs(cfg, cfg.encoder_layers, enc_kinds, enc_moe)
+        s["encoder"] = stk.stack_specs(cfg, cfg.encoder_layers, enc_kinds,
+                                       enc_moe, tag="enc")
         s["enc_norm"] = common.rmsnorm_specs(cfg.d_model)
     return s
 
@@ -90,8 +92,8 @@ def _encode(params, batch, cfg: ModelConfig, ctx: Ctx):
 def _logits(params, h, cfg: ModelConfig, ctx: Ctx):
     tied = params["embed"]["table"] if cfg.tie_embeddings else None
     p = params.get("lm_head", {})
-    y, aux = common.unembed(p, h, cfg.emt, tied_table=tied, seed=ctx.seed,
-                            key=ctx.key)
+    y, aux = common.unembed(p, h, cfg.emt_at("unembed"), tied_table=tied,
+                            seed=ctx.seed, key=ctx.key)
     y = common.softcap(y.astype(cfg.logit_dtype), cfg.final_softcap)
     return y, aux
 
@@ -143,6 +145,10 @@ def train_loss(params, batch, cfg: ModelConfig, ctx: Ctx, lam: float = 0.0):
         "reg": aux["reg"], "aux_loss": aux["aux_loss"],
         "rho_mean": aux["rho_sum"] / max(1, aux["rho_layers"]),
     }
+    # per-corner energy breakdown (flat scalar keys: the train loop JSONL
+    # logger floats every metric). Corner labels are static per placement.
+    for name, c in aux["corners"].items():
+        metrics[f"energy_uj/{name}"] = c["energy_pj"] * 1e-6
     return loss, metrics
 
 

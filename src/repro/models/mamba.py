@@ -24,7 +24,9 @@ from repro.models.context import Ctx
 SCAN_CHUNK = 4096
 
 
-def mamba_specs(cfg: ModelConfig) -> dict:
+def mamba_specs(cfg: ModelConfig, tag: str = "") -> dict:
+    """`tag` is the block's canonical path ("dec/layer_007/mamba"); projection
+    paths use the apply-time suffixes in/xp/dt/out."""
     D, DI, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
 
     def a_init(key, shape, dtype):
@@ -33,19 +35,19 @@ def mamba_specs(cfg: ModelConfig) -> dict:
         return jnp.log(a).astype(dtype)
 
     return {
-        "in_proj": dense_specs(D, 2 * DI, cfg.emt, axes=("embed", "mlp"),
-                               dtype=cfg.dtype),
+        "in_proj": dense_specs(D, 2 * DI, cfg.emt_at(f"{tag}/in"),
+                               axes=("embed", "mlp"), dtype=cfg.dtype),
         "conv_w": ParamSpec((cfg.ssm_conv, DI), cfg.dtype, (None, "mlp"),
                             normal_init(0.1)),
         "conv_b": ParamSpec((DI,), cfg.dtype, ("mlp",), constant_init(0.0)),
-        "x_proj": dense_specs(DI, R + 2 * N, cfg.emt, axes=("mlp", None),
-                              dtype=cfg.dtype),
-        "dt_proj": dense_specs(R, DI, cfg.emt, axes=(None, "mlp"),
-                               dtype=cfg.dtype, bias=True),
+        "x_proj": dense_specs(DI, R + 2 * N, cfg.emt_at(f"{tag}/xp"),
+                              axes=("mlp", None), dtype=cfg.dtype),
+        "dt_proj": dense_specs(R, DI, cfg.emt_at(f"{tag}/dt"),
+                               axes=(None, "mlp"), dtype=cfg.dtype, bias=True),
         "A_log": ParamSpec((DI, N), jnp.float32, ("mlp", None), a_init),
         "D_skip": ParamSpec((DI,), jnp.float32, ("mlp",), constant_init(1.0)),
-        "out_proj": dense_specs(DI, D, cfg.emt, axes=("mlp", "embed"),
-                                dtype=cfg.dtype),
+        "out_proj": dense_specs(DI, D, cfg.emt_at(f"{tag}/out"),
+                                axes=("mlp", "embed"), dtype=cfg.dtype),
     }
 
 
@@ -93,7 +95,7 @@ def mamba(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
     DI, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
     aux = new_aux()
 
-    xz, a = emt_dense(params["in_proj"], x, cfg.emt, tag=f"{tag}/in",
+    xz, a = emt_dense(params["in_proj"], x, cfg.emt_at(f"{tag}/in"), tag=f"{tag}/in",
                       seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     x_in, z = jnp.split(xz, 2, axis=-1)
@@ -104,11 +106,11 @@ def mamba(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
                                            params["conv_b"], conv_state)
     x_c = jax.nn.silu(x_c)
 
-    xdb, a = emt_dense(params["x_proj"], x_c, cfg.emt, tag=f"{tag}/xp",
+    xdb, a = emt_dense(params["x_proj"], x_c, cfg.emt_at(f"{tag}/xp"), tag=f"{tag}/xp",
                        seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     dt_r, Bm, Cm = jnp.split(xdb, [R, R + N], axis=-1)
-    dt, a = emt_dense(params["dt_proj"], dt_r, cfg.emt, tag=f"{tag}/dt",
+    dt, a = emt_dense(params["dt_proj"], dt_r, cfg.emt_at(f"{tag}/dt"), tag=f"{tag}/dt",
                       seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     dt = jax.nn.softplus(dt.astype(jnp.float32))                     # (B,S,DI)
@@ -128,7 +130,7 @@ def mamba(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
     y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm.astype(jnp.float32))
     y = y + params["D_skip"] * x_c.astype(jnp.float32)
     y = (y.astype(cfg.dtype)) * jax.nn.silu(z)
-    out, a = emt_dense(params["out_proj"], y, cfg.emt, tag=f"{tag}/out",
+    out, a = emt_dense(params["out_proj"], y, cfg.emt_at(f"{tag}/out"), tag=f"{tag}/out",
                        seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     new_state = {"h": h_last, "conv": new_conv}

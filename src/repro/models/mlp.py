@@ -7,25 +7,31 @@ from repro.models.config import ModelConfig
 from repro.models.context import Ctx
 
 
-def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None, tag: str = "") -> dict:
     D = cfg.d_model
     F = d_ff or cfg.d_ff
     return {
-        "wg": dense_specs(D, F, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
-        "wu": dense_specs(D, F, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
-        "wd": dense_specs(F, D, cfg.emt, axes=("mlp", "embed"), dtype=cfg.dtype),
+        "wg": dense_specs(D, F, cfg.emt_at(f"{tag}/wg"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype),
+        "wu": dense_specs(D, F, cfg.emt_at(f"{tag}/wu"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype),
+        "wd": dense_specs(F, D, cfg.emt_at(f"{tag}/wd"), axes=("mlp", "embed"),
+                          dtype=cfg.dtype),
     }
 
 
 def mlp(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str):
     act = common.activation(cfg.act)
     aux = new_aux()
-    g, a = emt_dense(params["wg"], x, cfg.emt, tag=f"{tag}/wg", seed=ctx.seed, key=ctx.key)
+    g, a = emt_dense(params["wg"], x, cfg.emt_at(f"{tag}/wg"), tag=f"{tag}/wg",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
-    u, a = emt_dense(params["wu"], x, cfg.emt, tag=f"{tag}/wu", seed=ctx.seed, key=ctx.key)
+    u, a = emt_dense(params["wu"], x, cfg.emt_at(f"{tag}/wu"), tag=f"{tag}/wu",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     h = act(g) * u
     h = ctx.shard(h, ("batch", "seq", "mlp"))
-    y, a = emt_dense(params["wd"], h, cfg.emt, tag=f"{tag}/wd", seed=ctx.seed, key=ctx.key)
+    y, a = emt_dense(params["wd"], h, cfg.emt_at(f"{tag}/wd"), tag=f"{tag}/wd",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     return y, aux

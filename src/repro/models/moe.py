@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import regularizer
-from repro.core.emt_linear import new_aux
+from repro.core.emt_linear import (EMTConfig, new_aux, add_aux, corner_entry,
+                                   emt_dense, dense_specs)
 from repro.core.noise import fluctuate
 from repro.core.quant import quantize_weights
 from repro.nn.param import ParamSpec, fan_in_init, constant_init, normal_init
@@ -26,11 +27,21 @@ from repro.models.context import Ctx
 GROUP_SIZE = 2048  # tokens per dispatch group
 
 
-def moe_specs(cfg: ModelConfig) -> dict:
+def moe_specs(cfg: ModelConfig, tag: str = "") -> dict:
+    """`tag` is the block's canonical path ("dec/layer_007/moe").  The expert
+    stack resolves as one placement unit at `{tag}/experts`; the router is
+    digital fp32 unless an explicit rule places it (`{tag}/router`)."""
     D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    emt = cfg.emt_at(f"{tag}/experts")
+    r_emt = cfg.emt_rule_at(f"{tag}/router")
+    if r_emt is None:
+        router = {"w": ParamSpec((D, E), jnp.float32, ("embed", None),
+                                 normal_init(0.02))}
+    else:
+        router = dense_specs(D, E, r_emt, axes=("embed", None),
+                             dtype=jnp.float32, init=normal_init(0.02))
     specs = {
-        "router": {"w": ParamSpec((D, E), jnp.float32, ("embed", None),
-                                  normal_init(0.02))},
+        "router": router,
         "wg": ParamSpec((E, D, F), cfg.dtype, ("expert", "embed", "mlp"),
                         fan_in_init(fan_axis=1)),
         "wu": ParamSpec((E, D, F), cfg.dtype, ("expert", "embed", "mlp"),
@@ -38,16 +49,15 @@ def moe_specs(cfg: ModelConfig) -> dict:
         "wd": ParamSpec((E, F, D), cfg.dtype, ("expert", "mlp", "embed"),
                         fan_in_init(fan_axis=1)),
     }
-    if cfg.emt.active:
+    if emt.active:
         specs["rho_raw"] = ParamSpec(
             (), jnp.float32, (),
-            constant_init(regularizer.rho_init_raw(cfg.emt.rho_init)))
+            constant_init(regularizer.rho_init_raw(emt.rho_init)))
     return specs
 
 
-def _emt_stacked(w, rho, cfg: ModelConfig, ctx: Ctx, tag: str):
+def _emt_stacked(w, rho, emt: EMTConfig, ctx: Ctx, tag: str):
     """Quantize + fluctuate a stacked (E, D, F) expert weight as EMT crossbars."""
-    emt = cfg.emt
     if not emt.active:
         return w
     wq, _ = quantize_weights(w, emt.quant)
@@ -76,9 +86,17 @@ def moe_ffn(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str):
 
     xt = x.reshape(G, sg, D)
     xt = ctx.shard(xt, ("batch", None, "embed"))
+    emt = cfg.emt_at(f"{tag}/experts")
+    r_emt = cfg.emt_rule_at(f"{tag}/router")
 
-    # --- routing (fp32) -----------------------------------------------------
-    logits = (xt.astype(jnp.float32) @ params["router"]["w"])        # (G, s, E)
+    # --- routing (fp32; digital unless explicitly placed) -------------------
+    r_aux = None
+    if r_emt is None:
+        logits = (xt.astype(jnp.float32) @ params["router"]["w"])    # (G, s, E)
+    else:
+        logits, r_aux = emt_dense(params["router"], xt.astype(jnp.float32),
+                                  r_emt, tag=f"{tag}/router", seed=ctx.seed,
+                                  key=ctx.key)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, K)                     # (G, s, K)
     gate_vals = gate_vals / jnp.maximum(
@@ -103,10 +121,10 @@ def moe_ffn(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str):
     expert_in = ctx.shard(expert_in, ("batch", "expert", None, "embed"))
 
     rho = (regularizer.rho_from_raw(params["rho_raw"])
-           if cfg.emt.active else jnp.float32(1.0))
-    wg = _emt_stacked(params["wg"], rho, cfg, ctx, f"{tag}/wg")
-    wu = _emt_stacked(params["wu"], rho, cfg, ctx, f"{tag}/wu")
-    wd = _emt_stacked(params["wd"], rho, cfg, ctx, f"{tag}/wd")
+           if emt.active else jnp.float32(1.0))
+    wg = _emt_stacked(params["wg"], rho, emt, ctx, f"{tag}/wg")
+    wu = _emt_stacked(params["wu"], rho, emt, ctx, f"{tag}/wu")
+    wd = _emt_stacked(params["wd"], rho, emt, ctx, f"{tag}/wd")
 
     act = common.activation(cfg.act)
     h = act(jnp.einsum("gecd,edf->gecf", expert_in, wg)) * \
@@ -124,21 +142,27 @@ def moe_ffn(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str):
     aux["aux_loss"] = (cfg.router_aux_weight * E * jnp.sum(me * ce)
                        + 1e-3 * jnp.mean(
                            jnp.square(jax.nn.logsumexp(logits, axis=-1))))
-    if cfg.emt.active and cfg.emt.energy_accounting != "off":
+    if r_aux is not None:
+        aux = add_aux(aux, r_aux)
+    if emt.active and emt.energy_accounting != "off":
         tokens_per_expert = float(T) * K / E
+        cells = 0
         for w in (wg, wu, wd):
             aux["reg"] = aux["reg"] + regularizer.layer_reg_term(
                 w, rho, alpha=1.0) / w.shape[-1]
-            aux["cells"] += int(np.prod(w.shape))
+            cells += int(np.prod(w.shape))
         x_level = jax.lax.stop_gradient(jnp.mean(jnp.abs(expert_in))) * 32.0
         w_norm = jax.lax.stop_gradient(
             sum(jnp.sum(jnp.abs(w.astype(jnp.float32))) for w in (wg, wu, wd)))
-        aux["energy_pj"] = cfg.emt.device.mac_energy(
+        e_pj = jnp.float32(emt.device.mac_energy(
             jax.lax.stop_gradient(rho), w_norm / jnp.maximum(
                 jnp.max(jnp.abs(wg)), 1e-8), x_level,
-            tokens_per_expert / max(1, E))
-        aux["energy_pj"] = jnp.float32(aux["energy_pj"])
-        aux["reads"] = jnp.float32(T * K * D)
-        aux["rho_sum"] = jax.lax.stop_gradient(rho)
-        aux["rho_layers"] = 1
+            tokens_per_expert / max(1, E)))
+        reads = jnp.float32(T * K * D)
+        expert_aux = new_aux()
+        expert_aux.update(
+            energy_pj=e_pj, reads=reads, cells=cells,
+            rho_sum=jax.lax.stop_gradient(rho), rho_layers=1,
+            corners={emt.corner_label: corner_entry(e_pj, reads, cells)})
+        aux = add_aux(aux, expert_aux)
     return y, aux

@@ -24,33 +24,34 @@ from repro.models.moe import moe_specs, moe_ffn
 from repro.models.mamba import mamba_specs, mamba, mamba_state_specs
 from repro.models.xlstm import (mlstm_specs, mlstm, mlstm_state_specs,
                                 slstm_specs, slstm, slstm_state_specs)
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, ATTN_KINDS
 from repro.models.context import Ctx
-
-ATTN_KINDS = ("attn", "global", "local")
 
 
 def block_specs(cfg: ModelConfig, kind: str, use_moe: bool,
-                cross: bool = False) -> dict:
+                cross: bool = False, tag: str = "") -> dict:
+    """`tag` is the block's canonical placement path ("dec/layer_007") — spec
+    builders resolve the same per-layer EMT configs the apply path will."""
     specs = {"norm1": common.rmsnorm_specs(cfg.d_model)}
     if kind in ATTN_KINDS:
-        specs["attn"] = attention_specs(cfg)
+        specs["attn"] = attention_specs(cfg, tag=f"{tag}/attn")
     elif kind == "mamba":
-        specs["mamba"] = mamba_specs(cfg)
+        specs["mamba"] = mamba_specs(cfg, tag=f"{tag}/mamba")
     elif kind == "mlstm":
-        specs["mlstm"] = mlstm_specs(cfg)
+        specs["mlstm"] = mlstm_specs(cfg, tag=f"{tag}/mlstm")
         return specs                         # self-contained block
     elif kind == "slstm":
-        specs["slstm"] = slstm_specs(cfg)
+        specs["slstm"] = slstm_specs(cfg, tag=f"{tag}/slstm")
         return specs
     else:
         raise ValueError(f"unknown block kind {kind!r}")
     if cross:
         specs["norm_x"] = common.rmsnorm_specs(cfg.d_model)
-        specs["xattn"] = attention_specs(cfg, cross=True)
+        specs["xattn"] = attention_specs(cfg, cross=True, tag=f"{tag}/xattn")
     if cfg.d_ff > 0 or use_moe:
         specs["norm2"] = common.rmsnorm_specs(cfg.d_model)
-        specs["ffn"] = moe_specs(cfg) if use_moe else mlp_specs(cfg)
+        specs["ffn"] = moe_specs(cfg, tag=f"{tag}/moe") if use_moe \
+            else mlp_specs(cfg, tag=f"{tag}/mlp")
     return specs
 
 
@@ -169,8 +170,9 @@ def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
 
 
 def stack_specs(cfg: ModelConfig, num_layers: int, kinds, moe_mask,
-                cross: bool = False) -> dict:
-    return {f"layer_{i:03d}": block_specs(cfg, kinds[i], moe_mask[i], cross)
+                cross: bool = False, tag: str = "") -> dict:
+    return {f"layer_{i:03d}": block_specs(cfg, kinds[i], moe_mask[i], cross,
+                                          tag=f"{tag}/layer_{i:03d}")
             for i in range(num_layers)}
 
 

@@ -31,21 +31,29 @@ MLSTM_CHUNK = 2048
 # ---------------------------------------------------------------------------
 # mLSTM
 # ---------------------------------------------------------------------------
-def mlstm_specs(cfg: ModelConfig) -> dict:
+def mlstm_specs(cfg: ModelConfig, tag: str = "") -> dict:
     D = cfg.d_model
     DI = 2 * D                       # projection factor 2 (xLSTM paper)
     H = cfg.num_heads
+    e = cfg.emt_at
     return {
-        "up": dense_specs(D, 2 * DI, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
+        "up": dense_specs(D, 2 * DI, e(f"{tag}/up"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype),
         "conv_w": ParamSpec((4, DI), cfg.dtype, (None, "mlp"), constant_init(0.1)),
         "conv_b": ParamSpec((DI,), cfg.dtype, ("mlp",), constant_init(0.0)),
-        "wq": dense_specs(DI, DI, cfg.emt, axes=("mlp", "heads"), dtype=cfg.dtype),
-        "wk": dense_specs(DI, DI, cfg.emt, axes=("mlp", "heads"), dtype=cfg.dtype),
-        "wv": dense_specs(DI, DI, cfg.emt, axes=("mlp", "heads"), dtype=cfg.dtype),
-        "wi": dense_specs(DI, H, cfg.emt, axes=("mlp", None), dtype=cfg.dtype, bias=True),
-        "wf": dense_specs(DI, H, cfg.emt, axes=("mlp", None), dtype=cfg.dtype, bias=True),
+        "wq": dense_specs(DI, DI, e(f"{tag}/wq"), axes=("mlp", "heads"),
+                          dtype=cfg.dtype),
+        "wk": dense_specs(DI, DI, e(f"{tag}/wk"), axes=("mlp", "heads"),
+                          dtype=cfg.dtype),
+        "wv": dense_specs(DI, DI, e(f"{tag}/wv"), axes=("mlp", "heads"),
+                          dtype=cfg.dtype),
+        "wi": dense_specs(DI, H, e(f"{tag}/wi"), axes=("mlp", None),
+                          dtype=cfg.dtype, bias=True),
+        "wf": dense_specs(DI, H, e(f"{tag}/wf"), axes=("mlp", None),
+                          dtype=cfg.dtype, bias=True),
         "out_norm": common.rmsnorm_specs(DI),
-        "down": dense_specs(DI, D, cfg.emt, axes=("mlp", "embed"), dtype=cfg.dtype),
+        "down": dense_specs(DI, D, e(f"{tag}/down"), axes=("mlp", "embed"),
+                            dtype=cfg.dtype),
     }
 
 
@@ -94,7 +102,7 @@ def mlstm(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
     hd = DI // H
     aux = new_aux()
 
-    up, a = emt_dense(params["up"], x, cfg.emt, tag=f"{tag}/up", seed=ctx.seed,
+    up, a = emt_dense(params["up"], x, cfg.emt_at(f"{tag}/up"), tag=f"{tag}/up", seed=ctx.seed,
                       key=ctx.key)
     aux = add_aux(aux, a)
     xm, z = jnp.split(up, 2, axis=-1)
@@ -107,16 +115,16 @@ def mlstm(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
 
     outs = {}
     for nm, src in (("wq", xc), ("wk", xc), ("wv", xm)):
-        o, a = emt_dense(params[nm], src, cfg.emt, tag=f"{tag}/{nm}",
+        o, a = emt_dense(params[nm], src, cfg.emt_at(f"{tag}/{nm}"), tag=f"{tag}/{nm}",
                          seed=ctx.seed, key=ctx.key)
         aux = add_aux(aux, a)
         outs[nm] = o.reshape(B, S, H, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
     q, k, v = outs["wq"], outs["wk"], outs["wv"]
 
-    gi, a = emt_dense(params["wi"], xc, cfg.emt, tag=f"{tag}/wi", seed=ctx.seed,
+    gi, a = emt_dense(params["wi"], xc, cfg.emt_at(f"{tag}/wi"), tag=f"{tag}/wi", seed=ctx.seed,
                       key=ctx.key)
     aux = add_aux(aux, a)
-    gf, a = emt_dense(params["wf"], xc, cfg.emt, tag=f"{tag}/wf", seed=ctx.seed,
+    gf, a = emt_dense(params["wf"], xc, cfg.emt_at(f"{tag}/wf"), tag=f"{tag}/wf", seed=ctx.seed,
                       key=ctx.key)
     aux = add_aux(aux, a)
     log_i = -jax.nn.softplus(-gi.astype(jnp.float32)).transpose(0, 2, 1)  # ≤ 0
@@ -135,7 +143,7 @@ def mlstm(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
     y = jnp.concatenate(ys, axis=2)                          # (B,H,S,hd)
     y = y.transpose(0, 2, 1, 3).reshape(B, S, DI).astype(cfg.dtype)
     y = common.rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
-    out, a = emt_dense(params["down"], y, cfg.emt, tag=f"{tag}/down",
+    out, a = emt_dense(params["down"], y, cfg.emt_at(f"{tag}/down"), tag=f"{tag}/down",
                        seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     return out, aux, {"C": C0, "n": n0, "conv": new_conv}
@@ -155,28 +163,35 @@ def mlstm_state_specs(cfg: ModelConfig, batch: int):
 # ---------------------------------------------------------------------------
 # sLSTM
 # ---------------------------------------------------------------------------
-def slstm_specs(cfg: ModelConfig) -> dict:
+def slstm_specs(cfg: ModelConfig, tag: str = "") -> dict:
     D = cfg.d_model
     F = -(-4 * D // 3 // 128) * 128   # proj factor 4/3, aligned
+    e = cfg.emt_at
     return {
-        "wz": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
-        "wi": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
-        "wf": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
-        "wo": dense_specs(D, D, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype, bias=True),
+        "wz": dense_specs(D, D, e(f"{tag}/wz"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype, bias=True),
+        "wi": dense_specs(D, D, e(f"{tag}/wi"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype, bias=True),
+        "wf": dense_specs(D, D, e(f"{tag}/wf"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype, bias=True),
+        "wo": dense_specs(D, D, e(f"{tag}/wo"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype, bias=True),
         # exact-variant recurrent matrices (used only when slstm_recurrent=True)
         "rz": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
         "ri": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
         "rf": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
         "ro": ParamSpec((D, D), cfg.dtype, ("embed", "mlp"), constant_init(0.0)),
-        "up": dense_specs(D, 2 * F, cfg.emt, axes=("embed", "mlp"), dtype=cfg.dtype),
-        "down": dense_specs(F, D, cfg.emt, axes=("mlp", "embed"), dtype=cfg.dtype),
+        "up": dense_specs(D, 2 * F, e(f"{tag}/up"), axes=("embed", "mlp"),
+                          dtype=cfg.dtype),
+        "down": dense_specs(F, D, e(f"{tag}/down"), axes=("mlp", "embed"),
+                            dtype=cfg.dtype),
     }
 
 
 def _slstm_gates(params, x, cfg, ctx, tag, aux, h_prev=None):
     outs = {}
     for nm in ("wz", "wi", "wf", "wo"):
-        o, a = emt_dense(params[nm], x, cfg.emt, tag=f"{tag}/{nm}",
+        o, a = emt_dense(params[nm], x, cfg.emt_at(f"{tag}/{nm}"), tag=f"{tag}/{nm}",
                          seed=ctx.seed, key=ctx.key)
         aux = add_aux(aux, a)
         if h_prev is not None:
@@ -229,12 +244,13 @@ def slstm(params, x, cfg: ModelConfig, *, ctx: Ctx, tag: str, state=None):
         h = (o * c_all / jnp.maximum(n_all, 1.0)).astype(x.dtype)
         new_state = {"c": c_all[:, -1], "n": n_all[:, -1]}
 
-    up, a = emt_dense(params["up"], h, cfg.emt, tag=f"{tag}/up", seed=ctx.seed,
+    up, a = emt_dense(params["up"], h, cfg.emt_at(f"{tag}/up"), tag=f"{tag}/up", seed=ctx.seed,
                       key=ctx.key)
     aux = add_aux(aux, a)
     u, gglu = jnp.split(up, 2, axis=-1)
-    y, a = emt_dense(params["down"], jax.nn.gelu(gglu) * u, cfg.emt,
-                     tag=f"{tag}/down", seed=ctx.seed, key=ctx.key)
+    y, a = emt_dense(params["down"], jax.nn.gelu(gglu) * u,
+                     cfg.emt_at(f"{tag}/down"), tag=f"{tag}/down",
+                     seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     return y, aux, new_state
 

@@ -113,7 +113,8 @@ def make_serve_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
                                             enc_lens=enc_lens)
         next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
                                           sample_seeds, sample_pos)
-        return next_tok, cache, aux["energy_pj"]
+        return next_tok, cache, {"energy_pj": aux["energy_pj"],
+                                 "corners": aux["corners"]}
 
     return serve_decode_step
 
@@ -134,7 +135,8 @@ def make_paged_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules,
             page_lens=page_lens, enc_lens=enc_lens)
         next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
                                           sample_seeds, sample_pos)
-        return next_tok, cache, aux["energy_pj"]
+        return next_tok, cache, {"energy_pj": aux["energy_pj"],
+                                 "corners": aux["corners"]}
 
     return paged_decode_step
 
@@ -263,7 +265,12 @@ class ServingEngine:
                  mesh: Optional[Mesh] = None, rules=None, seed: int = 0,
                  fresh_noise: bool = True, paged: bool = False,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 num_ring_blocks: Optional[int] = None):
+                 num_ring_blocks: Optional[int] = None, placement=None):
+        if placement is not None:
+            # heterogeneous device placement (EMTConfig or DevicePlacement):
+            # overrides the config's EMT surface for this engine. Params must
+            # have been initialized against the same placement.
+            cfg = cfg.replace(emt=placement)
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
@@ -310,9 +317,17 @@ class ServingEngine:
             self.cache = lm.init_cache(cfg, batch_size, max_len)
         self.total_energy_pj = 0.0
         self.idle_energy_pj = 0.0    # decode energy of idle slots (waste)
+        # per-corner energy totals (prefill + decode), keyed by the placement's
+        # corner labels — sums to total_energy_pj by construction
+        self.corner_energy_pj = {}
         self._steps = 0              # global decode-step counter (noise clock)
         self.peak_concurrent = 0     # high-water mark of active slots
         self._tables_dev = None      # device block tables (None = stale)
+
+    def _book_corners(self, corners):
+        for name, c in corners.items():
+            self.corner_energy_pj[name] = (self.corner_energy_pj.get(name, 0.0)
+                                           + float(c["energy_pj"]))
 
     # -- jitted helpers ------------------------------------------------------
     @staticmethod
@@ -423,13 +438,14 @@ class ServingEngine:
                 self._tables_dev = (jnp.asarray(tg), jnp.asarray(tl))
             extra = self._tables_dev
         step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
-        next_tok, self.cache, e = self._decode(
+        next_tok, self.cache, eaux = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(index),
             jnp.asarray(act), jnp.uint32(step_seed), jnp.asarray(seeds),
             jnp.asarray(spos), jnp.asarray(temps), jnp.asarray(topk),
             jnp.asarray(topp), jnp.asarray(enc), *extra)
         self._steps += 1
-        e = float(e)
+        e = float(eaux["energy_pj"])
+        self._book_corners(eaux["corners"])
         self.total_energy_pj += e
         # every row issues the same reads per step: bill e/B to each active
         # slot (occupancy-independent) and book the idle rows' share as waste
@@ -509,6 +525,7 @@ class ServingEngine:
         else:
             self.cache = self._insert(self.cache, small, jnp.int32(slot_id))
         prefill_e = float(aux["energy_pj"])
+        self._book_corners(aux["corners"])
         self.total_energy_pj += prefill_e
         tok0 = int(self._sample(
             logits, jnp.asarray([req.temperature], jnp.float32),

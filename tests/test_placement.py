@@ -1,0 +1,285 @@
+"""Heterogeneous device-placement API: registry, rule resolution, dict
+round-tripping (checkpoint metadata), old-config equivalence, and a mixed
+(>= 3 corners) model end-to-end (train grad + serving with per-corner energy
+that sums to the total)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs import get_config, mixed_placement
+from repro.configs.common import emt_preset
+from repro.core.device import (DeviceModel, get_device, register_device,
+                               device_names)
+from repro.core.emt_linear import EMTConfig, IDEAL
+from repro.core.placement import (DevicePlacement, LayerRule, as_placement,
+                                  single, emt_for_corner, placement_to_dict,
+                                  placement_from_dict, emt_to_dict,
+                                  emt_from_dict)
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.nn.param import init_params
+from repro.serve.engine import ServingEngine, GenRequest
+
+CTX = Ctx()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_presets_exist():
+    for name in ("default", "pcm", "rram", "mlc2", "mlc4", "sram_digital"):
+        assert name in device_names()
+        assert isinstance(get_device(name), DeviceModel)
+    assert get_device("mlc4").num_states == 4
+    assert get_device("sram_digital").amplitude == 0.0
+
+
+def test_registry_unknown_corner_raises():
+    with pytest.raises(KeyError, match="unknown device corner"):
+        get_device("vaporware")
+    with pytest.raises(KeyError):
+        emt_for_corner("vaporware")
+
+
+def test_register_device_no_silent_overwrite():
+    dev = DeviceModel(amplitude=0.2)
+    register_device("test_corner_x", dev)
+    try:
+        assert get_device("test_corner_x") is dev
+        with pytest.raises(ValueError, match="already registered"):
+            register_device("test_corner_x", DeviceModel())
+        register_device("test_corner_x", DeviceModel(), overwrite=True)
+    finally:
+        from repro.core import device as device_mod
+        device_mod._REGISTRY.pop("test_corner_x", None)
+
+
+# ---------------------------------------------------------------------------
+# rule resolution
+# ---------------------------------------------------------------------------
+def test_first_match_wins_on_overlapping_rules():
+    pcm = emt_for_corner("pcm", "analog")
+    rram = emt_for_corner("rram", "bitserial")
+    p = DevicePlacement(rules=(LayerRule("*/attn/wq", pcm),
+                               LayerRule("*/attn/*", rram)),
+                        default=IDEAL)
+    # overlapping patterns: the earlier (more specific here) rule wins
+    assert p.resolve("dec/layer_000/attn/wq") is pcm
+    assert p.resolve("dec/layer_000/attn/wk") is rram
+    assert p.resolve("dec/layer_000/mlp/wg") is IDEAL
+    # reversed order: the broad rule shadows the specific one
+    q = DevicePlacement(rules=(LayerRule("*/attn/*", rram),
+                               LayerRule("*/attn/wq", pcm)),
+                        default=IDEAL)
+    assert q.resolve("dec/layer_000/attn/wq") is rram
+
+
+def test_match_is_explicit_rules_only():
+    p = single(emt_preset("analog"))
+    assert p.match("dec/layer_000/moe/router") is None     # default not applied
+    assert p.resolve("dec/layer_000/moe/router").active
+    q = DevicePlacement(rules=(LayerRule("*/moe/router",
+                                         emt_for_corner("sram_digital",
+                                                        "analog")),),
+                        default=emt_preset("analog"))
+    assert q.match("dec/layer_003/moe/router").corner == "sram_digital"
+
+
+def test_as_placement_wraps_and_passes_through():
+    emt = emt_preset("analog")
+    p = as_placement(emt)
+    # equality, not identity: as_placement caches wraps by config value
+    assert isinstance(p, DevicePlacement) and p.default == emt and not p.rules
+    assert as_placement(p) is p
+    with pytest.raises(TypeError):
+        as_placement({"mode": "analog"})
+
+
+def test_placement_corners_and_active():
+    p = mixed_placement()
+    assert set(p.corners()) == {"pcm", "rram", "sram_digital"}
+    assert p.active and p.mode == "analog"
+    assert not single(IDEAL).active
+
+
+# ---------------------------------------------------------------------------
+# dict serialization (checkpoint extra metadata)
+# ---------------------------------------------------------------------------
+def test_emt_dict_roundtrip():
+    for emt in (IDEAL, emt_preset("analog"), emt_preset("bitserial"),
+                emt_for_corner("mlc4", "analog", intensity="strong")):
+        back = emt_from_dict(emt_to_dict(emt))
+        assert back == emt
+
+
+def test_placement_dict_roundtrip_through_checkpoint(tmp_path):
+    import json
+    p = mixed_placement()
+    d = placement_to_dict(p)
+    json.dumps(d)                                  # must be plain JSON
+    assert placement_from_dict(d) == p
+    # a plain EMTConfig serializes as its zero-rule wrap
+    d1 = placement_to_dict(emt_preset("analog"))
+    assert placement_from_dict(d1) == single(emt_preset("analog"))
+    # through CheckpointManager extra metadata (meta.json is JSON on disk)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"w": jnp.zeros(2)}, extra={"placement": d})
+    _, meta = mgr.restore(1, {"w": jnp.zeros(2)})
+    assert placement_from_dict(meta["extra"]["placement"]) == p
+
+
+def test_serialization_unknown_corner_and_field_errors():
+    d = emt_to_dict(emt_preset("analog"))
+    d["device"] = "vaporware"                      # registry reference form
+    with pytest.raises(KeyError, match="unknown device corner"):
+        emt_from_dict(d)
+    with pytest.raises(ValueError, match="unknown DeviceModel fields"):
+        emt_from_dict({**emt_to_dict(IDEAL),
+                       "device": {"amplitude": 0.1, "bogus_knob": 3}})
+
+
+def test_device_string_reference_resolves_from_registry():
+    d = emt_to_dict(emt_for_corner("rram", "bitserial"))
+    d["device"] = "rram"
+    assert emt_from_dict(d).device == get_device("rram")
+
+
+# ---------------------------------------------------------------------------
+# equivalence: zero-rule wrap == old global EMTConfig, bit-identical
+# ---------------------------------------------------------------------------
+def _tiny_cfg(emt, **kw):
+    base = dict(name="t", family="dense", num_layers=2, d_model=48,
+                num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=128,
+                head_dim=12, dtype=jnp.float32, emt=emt, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("mode", ["ideal", "analog", "bitserial"])
+def test_wrapped_placement_bit_identical_to_plain_config(mode):
+    emt = emt_preset(mode)
+    cfg_plain = _tiny_cfg(emt)
+    cfg_wrap = _tiny_cfg(single(emt))
+    params = init_params(lm.specs(cfg_plain), jax.random.PRNGKey(0))
+    # identical param trees (same specs resolve everywhere)
+    p2 = init_params(lm.specs(cfg_wrap), jax.random.PRNGKey(0))
+    assert jax.tree_util.tree_structure(params) == \
+        jax.tree_util.tree_structure(p2)
+    toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128))
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    ctx = Ctx(seed=3)
+    loss_a, m_a = lm.train_loss(params, batch, cfg_plain, ctx)
+    loss_b, m_b = lm.train_loss(params, batch, cfg_wrap, ctx)
+    assert float(loss_a) == float(loss_b)
+    assert float(m_a["energy_uj"]) == float(m_b["energy_uj"])
+    # decode path too
+    cache_a = lm.init_cache(cfg_plain, 2, 9)
+    cache_b = lm.init_cache(cfg_wrap, 2, 9)
+    ca, la, aux_a = lm.prefill(params, {"tokens": batch["tokens"]},
+                               cfg_plain, ctx, cache_a)
+    cb, lb, aux_b = lm.prefill(params, {"tokens": batch["tokens"]},
+                               cfg_wrap, ctx, cache_b)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert float(aux_a["energy_pj"]) == float(aux_b["energy_pj"])
+    da, _, _ = lm.decode_step(params, ca, jnp.asarray(toks[:, -1]), 8,
+                              cfg_plain, ctx)
+    db, _, _ = lm.decode_step(params, cb, jnp.asarray(toks[:, -1]), 8,
+                              cfg_wrap, ctx)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+
+def test_corner_breakdown_sums_to_total_energy():
+    cfg = _tiny_cfg(emt_preset("analog"))
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    toks = np.arange(16, dtype=np.int32).reshape(2, 8) % cfg.vocab_size
+    cache = lm.init_cache(cfg, 2, 9)
+    _, _, aux = lm.prefill(params, {"tokens": jnp.asarray(toks)}, cfg,
+                           Ctx(seed=1), cache)
+    total = float(aux["energy_pj"])
+    by_corner = sum(float(c["energy_pj"]) for c in aux["corners"].values())
+    assert total > 0
+    np.testing.assert_allclose(by_corner, total, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# mixed placement (3 corners) end-to-end: train grad + serve
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mixed_moe():
+    cfg = get_config("moonshot-v1-16b-a3b", smoke=True, placement="mixed")
+    cfg = cfg.replace(dtype=jnp.float32, remat=False)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_mixed_placement_resolves_three_corners(mixed_moe):
+    cfg, _ = mixed_moe
+    plan = cfg.placement_plan()
+    corners = {c for _, c, _ in plan}
+    assert {"pcm", "rram", "sram_digital"} <= corners
+    by_path = dict((p, (c, m)) for p, c, m in plan)
+    assert by_path["dec/layer_000/attn/wq"] == ("pcm", "analog")
+    assert any(p.endswith("/moe/experts") and c == ("rram", "bitserial")
+               for p, c in [(p, v) for p, v in by_path.items()])
+    assert any(p.endswith("/moe/router") and v == ("sram_digital", "analog")
+               for p, v in by_path.items())
+
+
+def test_plan_reports_unplaced_router_as_digital():
+    """The plan must say what moe_specs/moe_ffn do: the default never pulls
+    the router onto a crossbar, so without an explicit rule it is digital."""
+    cfg = get_config("moonshot-v1-16b-a3b", emt_mode="analog", smoke=True)
+    routers = [t for t in cfg.placement_plan() if t[0].endswith("/moe/router")]
+    assert routers and all(t[1:] == ("digital", "fp32") for t in routers)
+
+
+def test_mixed_placement_router_on_crossbar_has_rho(mixed_moe):
+    cfg, params = mixed_moe
+    moe_layers = [n for n, moe in zip(
+        [f"layer_{i:03d}" for i in range(cfg.num_layers)],
+        cfg.moe_layer_mask()) if moe]
+    router = params["decoder"][moe_layers[0]]["ffn"]["router"]
+    assert "rho_raw" in router                    # explicitly placed -> EMT
+
+
+def test_mixed_placement_trains(mixed_moe):
+    cfg, params = mixed_moe
+    toks = np.arange(16, dtype=np.int32).reshape(2, 8) % cfg.vocab_size
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+
+    def loss_fn(p):
+        return lm.train_loss(p, batch, cfg, Ctx(seed=2), lam=1e-6)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    gnorm = float(jnp.sqrt(sum(jnp.sum(g * g.conj()).real
+                               for g in jax.tree.leaves(grads))))
+    assert np.isfinite(gnorm) and gnorm > 0
+    total = float(metrics["energy_uj"])
+    split = {k.split("/")[1]: float(v) for k, v in metrics.items()
+             if k.startswith("energy_uj/")}
+    assert set(split) == {"pcm", "rram", "sram_digital"}
+    np.testing.assert_allclose(sum(split.values()), total, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_mixed_placement_serves_with_corner_energy(mixed_moe):
+    cfg, params = mixed_moe
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=20,
+                        fresh_noise=False)
+    rng = np.random.default_rng(0)
+    reqs = [GenRequest(prompt=rng.integers(0, cfg.vocab_size, 6)
+                       .astype(np.int32), max_new=4, seed=i)
+            for i in range(3)]
+    res = eng.serve(reqs, stagger=1)
+    assert len(res) == 3 and all(len(r.tokens) == 4 for r in res)
+    assert set(eng.corner_energy_pj) == {"pcm", "rram", "sram_digital"}
+    np.testing.assert_allclose(sum(eng.corner_energy_pj.values()),
+                               eng.total_energy_pj, rtol=1e-6)
+    assert min(eng.corner_energy_pj.values()) > 0

@@ -1,0 +1,119 @@
+"""Per-row activation (DAC) quantization scale — the fix for the ROADMAP
+"Known subtlety": the per-tensor DAC scale couples co-tenant batch rows at the
+LSB, so analog-mode token streams are occupancy-sensitive and cache
+equivalences only hold at matched admission schedules.  With
+``QuantConfig(a_per_row=True)`` every token gets its own row scale and analog
+paged-vs-contiguous identity holds under *mismatched* admission schedules."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.emt_linear import EMTConfig, emt_dense, dense_specs
+from repro.core.quant import QuantConfig, quant_levels
+from repro.models import lm
+from repro.nn.param import init_params
+from repro.serve.engine import ServingEngine, GenRequest
+
+
+def test_quant_levels_per_row_scale_is_row_local():
+    x = np.array([[0.5, -0.25, 0.125], [8.0, 2.0, -4.0]], np.float32)
+    lv, scale = quant_levels(jnp.asarray(x), 8, axis=-1)
+    assert scale.shape == (2, 1)
+    # scaling one row must not move the other row's levels
+    x2 = x.copy()
+    x2[1] *= 100.0
+    lv2, _ = quant_levels(jnp.asarray(x2), 8, axis=-1)
+    np.testing.assert_array_equal(np.asarray(lv[0]), np.asarray(lv2[0]))
+    # per-tensor couples them
+    lv_t, scale_t = quant_levels(jnp.asarray(x), 8, axis=None)
+    lv_t2, _ = quant_levels(jnp.asarray(x2), 8, axis=None)
+    assert scale_t.shape == ()
+    assert not np.array_equal(np.asarray(lv_t[0]), np.asarray(lv_t2[0]))
+
+
+def _dense(a_per_row):
+    cfg = EMTConfig(mode="analog",
+                    quant=QuantConfig(a_per_row=a_per_row))
+    specs = dense_specs(16, 8, cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_emt_dense_per_row_output_is_cotenant_independent():
+    cfg, params = _dense(a_per_row=True)
+    rng = np.random.default_rng(0)
+    x1 = rng.normal(size=(1, 16)).astype(np.float32)
+    other_a = rng.normal(size=(1, 16)).astype(np.float32)
+    other_b = 50.0 * rng.normal(size=(1, 16)).astype(np.float32)
+    ya, _ = emt_dense(params, jnp.asarray(np.vstack([x1, other_a])), cfg,
+                      tag="t", seed=3)
+    yb, _ = emt_dense(params, jnp.asarray(np.vstack([x1, other_b])), cfg,
+                      tag="t", seed=3)
+    np.testing.assert_array_equal(np.asarray(ya[0]), np.asarray(yb[0]))
+    # control: the per-tensor scale sees the loud co-tenant and shifts row 0
+    cfg_t, params_t = _dense(a_per_row=False)
+    za, _ = emt_dense(params_t, jnp.asarray(np.vstack([x1, other_a])), cfg_t,
+                      tag="t", seed=3)
+    zb, _ = emt_dense(params_t, jnp.asarray(np.vstack([x1, other_b])), cfg_t,
+                      tag="t", seed=3)
+    assert not np.array_equal(np.asarray(za[0]), np.asarray(zb[0]))
+
+
+# ---------------------------------------------------------------------------
+# serving regression: analog mode, mismatched admission schedules
+# ---------------------------------------------------------------------------
+def _analog_cfg(a_per_row):
+    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, num_layers=4)
+    if a_per_row:
+        cfg = cfg.replace(emt=cfg.emt.replace(
+            quant=dataclasses.replace(cfg.emt.quant, a_per_row=True)))
+    return cfg
+
+
+def _mismatch_runs(cfg):
+    """Tokens from a block-starved paged engine (admissions delayed ->
+    occupancy differs) vs each request served alone."""
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = [GenRequest(prompt=rng.integers(0, cfg.vocab_size, int(L))
+                       .astype(np.int32), max_new=4, seed=i)
+            for i, L in enumerate([5, 6, 4, 5])]
+    tight = ServingEngine(cfg, params, batch_size=4, max_len=16, seed=7,
+                          fresh_noise=False, paged=True, block_size=4,
+                          num_blocks=6, num_ring_blocks=8)
+    for r in reqs:
+        tight.submit(r)
+    got = {r.rid: r.tokens for r in tight.drain()}
+    solo = ServingEngine(cfg, params, batch_size=1, max_len=16, seed=7,
+                         fresh_noise=False)
+    alone = {}
+    for rid in sorted(got):
+        solo.submit(GenRequest(prompt=reqs[rid].prompt,
+                               max_new=reqs[rid].max_new, seed=reqs[rid].seed))
+        (res,) = solo.drain()
+        alone[rid] = res.tokens
+    return got, alone
+
+
+@pytest.mark.slow
+def test_analog_identity_under_mismatched_schedules_with_per_row_scale():
+    got, alone = _mismatch_runs(_analog_cfg(a_per_row=True))
+    for rid in alone:
+        np.testing.assert_array_equal(
+            got[rid], alone[rid],
+            err_msg=f"per-row DAC scale: request {rid} still "
+                    f"occupancy-sensitive under mismatched admission")
+
+
+@pytest.mark.slow
+def test_analog_per_tensor_scale_is_occupancy_sensitive():
+    """Negative control: with the paper's per-tensor DAC scale the same
+    mismatched schedule perturbs tokens — the subtlety is real, so the fix
+    above is load-bearing (if this starts passing, re-examine both)."""
+    got, alone = _mismatch_runs(_analog_cfg(a_per_row=False))
+    assert any(not np.array_equal(got[rid], alone[rid]) for rid in alone)
