@@ -1,0 +1,186 @@
+"""Microbenchmark: paged-attention decode — materialized gather vs fused kernel
+vs contiguous-cache attention.
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--out BENCH_kernels.json]
+
+One decode step of GQA attention (B rows, one query token each) against a
+max_len-position KV budget, across ``block_size in {8, 16, 32}`` and
+``occupancy in {25%, 100%}`` (fraction of max_len each row actually holds).
+Four variants:
+
+* ``contiguous``     — dense attention over the (B, max_len) contiguous cache
+  (the pre-paging engine's decode read).
+* ``gather_full``    — PR 2's fallback: ``paged_gather`` materializes the full
+  (B, max_len) logical view through the block table, then dense attention.
+* ``gather_clamped`` — the same gather clamped to the block-rounded power-of-
+  two bucket of the furthest live position (``serve.engine.view_bucket``).
+* ``fused``          — the fused kernel path (``kernels.ops.paged_attention``).
+  On CPU this times the jnp reference rung (one-shot attend over the
+  table-gathered clamped view — the production CPU shape); on TPU the pallas
+  rung reads block tiles through the table inside the kernel and the view is
+  never materialized, which is what the bytes model below describes.
+
+Reported per variant: median wall time per call (jitted, device-synced) and a
+**bytes-moved estimate** for K/V traffic — the quantity the paper's energy
+argument cares about (crossbar/HBM reads):
+
+* contiguous / gather_full:  B * max_len * KV * hd * 2 arrays * itemsize
+  (the gather touches every logical position, allocated or not — the zero
+  block is re-read for every unallocated table entry);
+* gather_clamped / fused:    B * view_len * KV * hd * 2 * itemsize — the
+  kernel DMAs one tile per table entry in the *clamped* width, so a pow2
+  view bucket larger than the allocated blocks still pays for its zero-block
+  tail (skipping zero-block chunks in-kernel is a noted follow-up); at 25%
+  occupancy both move strictly fewer bytes than the max_len gather.
+
+Writes a JSON report to --out (BENCH_kernels.json at the repo root).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.attention import paged_gather
+from repro.models.common import NEG_INF
+from repro.serve.engine import view_bucket
+
+
+def _median_wall(fn, *args, iters=20, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _attend_dense(q, k, v, mask, scale):
+    """One-shot-softmax decode attention over a materialized (B, L) view."""
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + mask[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def bench_case(*, B, KV, G, hd, max_len, block_size, occupancy, dtype,
+               seed=0):
+    rng = np.random.default_rng(seed)
+    itemsize = jnp.dtype(dtype).itemsize
+    filled = max(1, int(round(occupancy * max_len)))
+    width = -(-max_len // block_size)
+    used = -(-filled // block_size)
+    num_blocks = B * width
+    scale = 1.0 / np.sqrt(hd)
+
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(num_blocks + 1, block_size, KV, hd)),
+                     dtype).at[num_blocks].set(0.0)
+    vp = jnp.asarray(rng.normal(size=(num_blocks + 1, block_size, KV, hd)),
+                     dtype).at[num_blocks].set(0.0)
+    # per-row tables: `used` allocated blocks, rest -> zero block
+    tab = np.full((B, width), num_blocks, np.int32)
+    perm = rng.permutation(num_blocks)
+    for b in range(B):
+        tab[b, :used] = perm[b * used:(b + 1) * used]
+    table = jnp.asarray(tab)
+    k_cont = jnp.asarray(rng.normal(size=(B, max_len, KV, hd)), dtype)
+    v_cont = jnp.asarray(rng.normal(size=(B, max_len, KV, hd)), dtype)
+    idx = filled - 1
+    causal = lambda L: jnp.where(  # noqa: E731
+        jnp.arange(L)[None, :] <= idx, 0.0, NEG_INF).astype(
+        jnp.float32) * jnp.ones((B, 1), jnp.float32)
+    vlen = view_bucket(filled, block_size, max_len)
+
+    contiguous = jax.jit(lambda q, k, v: _attend_dense(
+        q, k, v, causal(max_len), scale))
+    gather_full = jax.jit(lambda q, kp, vp, t: _attend_dense(
+        q, paged_gather(kp, t, max_len), paged_gather(vp, t, max_len),
+        causal(max_len), scale))
+    gather_clamped = jax.jit(lambda q, kp, vp, t: _attend_dense(
+        q, paged_gather(kp, t, vlen), paged_gather(vp, t, vlen),
+        causal(vlen), scale))
+    cwidth = -(-vlen // block_size)
+    fused = jax.jit(lambda q, kp, vp, t: ops.paged_attention(
+        q, kp, vp, t, causal(vlen), impl="auto"))
+
+    kv_elem = KV * hd * 2 * itemsize
+    out = {
+        "B": B, "KV": KV, "G": G, "hd": hd, "max_len": max_len,
+        "block_size": block_size, "occupancy": occupancy, "filled": filled,
+        "view_len": vlen,
+        "wall_us": {
+            "contiguous": _median_wall(contiguous, q, k_cont, v_cont) * 1e6,
+            "gather_full": _median_wall(gather_full, q, kp, vp, table) * 1e6,
+            "gather_clamped": _median_wall(gather_clamped, q, kp, vp,
+                                           table[:, :cwidth]) * 1e6,
+            "fused": _median_wall(fused, q, kp, vp, table[:, :cwidth]) * 1e6,
+        },
+        "kv_bytes_moved": {
+            "contiguous": B * max_len * kv_elem,
+            "gather_full": B * max_len * kv_elem,
+            "gather_clamped": B * vlen * kv_elem,
+            # one tile per clamped-width table entry, zero-block tail included
+            "fused": B * cwidth * block_size * kv_elem,
+        },
+    }
+    out["wall_us"] = {k: round(v, 1) for k, v in out["wall_us"].items()}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--kv-heads", type=int, default=4)
+    ap.add_argument("--group", type=int, default=2)
+    ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=256)
+    args = ap.parse_args()
+
+    cases = []
+    for block_size in (8, 16, 32):
+        for occupancy in (0.25, 1.0):
+            cases.append(bench_case(
+                B=args.batch, KV=args.kv_heads, G=args.group,
+                hd=args.head_dim, max_len=args.max_len,
+                block_size=block_size, occupancy=occupancy,
+                dtype=jnp.float32))
+            c = cases[-1]
+            print(f"bs={block_size:3d} occ={occupancy:4.0%} "
+                  f"wall_us={c['wall_us']} bytes={c['kv_bytes_moved']}")
+
+    # the acceptance invariant: at partial occupancy the fused path moves
+    # strictly fewer K/V bytes than the materialized full gather
+    for c in cases:
+        if c["occupancy"] < 1.0:
+            assert (c["kv_bytes_moved"]["fused"]
+                    < c["kv_bytes_moved"]["gather_full"]), c
+
+    report = {
+        "shape": {"B": args.batch, "KV": args.kv_heads, "G": args.group,
+                  "hd": args.head_dim, "max_len": args.max_len,
+                  "dtype": "float32"},
+        "note": ("fused impl timed on the jnp reference rung (CPU "
+                 "production shape: clamped-view one-shot attend); the "
+                 "pallas rung reads block tiles in-kernel on TPU. Bytes are "
+                 "the analytic K/V traffic model from the module "
+                 "docstring."),
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

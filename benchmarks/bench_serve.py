@@ -17,6 +17,10 @@ Three workloads on a smoke config:
   KV memory it admits >= 2x the concurrent requests (reported as
   `admissible_concurrent` / `kv_bytes`, plus measured peak occupancy and
   throughput on the same workload).
+* **fused_paged** — equal-batch contiguous vs paged with the fused
+  paged-attention kernel + length-clamped logical views (PR 4): paged decode
+  tok/s should now be >= contiguous at equal batch, on top of PR 2's
+  admissible-concurrency win.
 * **mixed_placement** — a heterogeneous device placement on the MoE smoke
   arch (analog attention on PCM + bit-serial MLP/experts on RRAM + digital
   SRAM router, docs/device_models.md): records tok/s and the per-corner
@@ -62,15 +66,26 @@ def run_workload(cfg, params, reqs, *, stagger, batch=None, max_len=None,
         eng = ServingEngine(cfg, params, batch_size=batch, max_len=max_len)
     # warm THIS engine's jit caches (the wrappers are per-engine closures):
     # compile the decode step + every prefill bucket the workload will hit,
-    # then reset the counters so the timed run starts clean
-    for L in sorted({prefill_bucket(len(r.prompt)) for r in reqs}):
-        eng.submit(GenRequest(prompt=np.zeros(L, np.int32), max_new=2))
+    # then reset the counters so the timed run starts clean.  Paged engines
+    # are jit-static in the clamped view length, so the warmup must sweep
+    # every view bucket the timed run can touch: each prompt bucket solo at
+    # the workload's full decode budget (positions grow through every
+    # intermediate bucket), then all buckets together — a cold view bucket
+    # mid-run would bill a full decode-step compile to the timing.
+    buckets = sorted({prefill_bucket(len(r.prompt)) for r in reqs})
+    deepest = max(r.max_new for r in reqs)
+    for L in buckets:
+        eng.submit(GenRequest(prompt=np.zeros(L, np.int32), max_new=deepest))
+        eng.drain()
+    for L in buckets:
+        eng.submit(GenRequest(prompt=np.zeros(L, np.int32), max_new=deepest))
     eng.drain()
     eng._steps = 0
     eng.total_energy_pj = 0.0
     eng.idle_energy_pj = 0.0
     eng.corner_energy_pj = {}
     eng.peak_concurrent = 0
+    eng.kv_reads_total = 0.0
     t0 = time.time()
     results = eng.serve(reqs, stagger=stagger)
     wall_s = time.time() - t0
@@ -139,6 +154,76 @@ def run_paged_compare(cfg, params, *, max_len=128, block_size=8, n_requests=16,
     return out
 
 
+def decode_wave_tok_per_s(cfg, eng, *, batch, prompt_len=8, max_new=64):
+    """One lockstep wave of `batch` equal requests; only the steady decode
+    steps are timed (admission + the first mixed step are not).  Every timed
+    step advances `batch` active slots by one token, so tok/s = batch * steps
+    / wall."""
+    rng = np.random.default_rng(7)
+    for i in range(batch):
+        eng.submit(GenRequest(
+            prompt=rng.integers(0, cfg.vocab_size, size=prompt_len)
+            .astype(np.int32), max_new=max_new, seed=i))
+    eng.step()                        # admissions + first decode, untimed
+    t0 = time.time()
+    steps = 0
+    while eng.scheduler.busy:
+        eng.step()
+        steps += 1
+    return batch * steps / (time.time() - t0)
+
+
+def run_fused_compare(*, max_len=1024, block_size=16, batch=4, max_new=64):
+    """Equal-batch contiguous vs paged *decode* throughput with the fused
+    kernel + clamped views — the step that turns PR 2's capacity win into a
+    throughput win.
+
+    The contiguous engine attends a (B, max_len) cache every decode step; the
+    paged engine walks only the live block-rounded view through the fused
+    kernel (jnp reference rung on CPU — the table-gathered clamped view; the
+    pallas rung reads block tiles in-kernel on TPU).  The win scales with
+    (max_len / live-view) x the share of decode spent in global attention, so
+    the scenario is the regime the paged cache exists for: a dense all-global
+    attention decoder (gemma3 smoke widened to d_model 256 — at the 64-wide
+    smoke width, per-layer dispatch overhead drowns the attention-width
+    difference on CPU; gemma3's 5-of-6 sliding-window layers would likewise
+    cap the exposure at one global layer) serving short requests under a
+    long-context budget.  Decode-only timing keeps prefill/admission cost —
+    identical for both engines — from compressing the ratio toward 1, and the
+    engines' waves are interleaved so host-load drift hits both alike (the
+    first wave of each is warmup: its position sweep compiles every prefill
+    and clamped-view bucket later waves touch, and is dropped from the
+    medians).
+    """
+    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, d_model=256, num_heads=8,
+                      head_dim=32, d_ff=512, layer_pattern=("attn",),
+                      sliding_window=0)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    cont = ServingEngine(cfg, params, batch_size=batch, max_len=max_len)
+    fused = ServingEngine(cfg, params, batch_size=batch, max_len=max_len,
+                          paged=True, block_size=block_size)
+    vals = {"contiguous": [], "fused_paged": []}
+    for _ in range(4):
+        vals["contiguous"].append(decode_wave_tok_per_s(
+            cfg, cont, batch=batch, max_new=max_new))
+        vals["fused_paged"].append(decode_wave_tok_per_s(
+            cfg, fused, batch=batch, max_new=max_new))
+    out = {
+        "arch": cfg.name + "-dense-attn", "max_len": max_len,
+        "block_size": block_size, "batch": batch, "max_new": max_new,
+        "contiguous": {"decode_tok_per_s": round(
+            float(np.median(vals["contiguous"][1:])), 2)},
+        "fused_paged": {"decode_tok_per_s": round(
+            float(np.median(vals["fused_paged"][1:])), 2)},
+    }
+    out["decode_view_len"] = fused.view_len      # last step's clamped view
+    out["tok_per_s_ratio"] = round(
+        out["fused_paged"]["decode_tok_per_s"] /
+        out["contiguous"]["decode_tok_per_s"], 3)
+    return out
+
+
 def run_mixed_placement(*, arch="moonshot-v1-16b-a3b", n_requests=8,
                         max_new=8, batch=4):
     """Heterogeneous placement serving: per-corner energy split + tok/s."""
@@ -173,6 +258,9 @@ def main():
     ap.add_argument("--stagger", type=int, default=2)
     ap.add_argument("--paged-max-len", type=int, default=128,
                     help="context budget for the paged-vs-contiguous compare")
+    ap.add_argument("--fused-max-len", type=int, default=1024,
+                    help="context budget for the fused_paged equal-batch "
+                         "compare (long-context regime)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -194,6 +282,7 @@ def main():
         batch=args.batch, max_len=max_len, stagger=args.stagger)
     report["paged_vs_contiguous"] = run_paged_compare(
         cfg, params, max_len=args.paged_max_len)
+    report["fused_paged"] = run_fused_compare(max_len=args.fused_max_len)
     report["mixed_placement"] = run_mixed_placement(
         n_requests=args.requests, max_new=args.max_new, batch=args.batch)
 

@@ -10,7 +10,9 @@ uJ/token, demonstrating the paper's accuracy/energy/latency trade-off
 (Table 1 structure) at serving time.  The engines run on the paged
 block-table KV cache (block_size=8): requests hold only the blocks their
 tokens occupy, so admission is gated on the free-block budget rather than
-max_len-sized slots.
+max_len-sized slots, and decode attends through the fused paged-attention
+kernel (`--no-fused-paged-attn` falls back to the length-clamped gather;
+the resolved per-layer attention path is printed at startup).
 
 `--device` pins all layers to one registered technology corner; the default
 `mixed` variant is a heterogeneous placement (analog attention on PCM,
@@ -26,7 +28,7 @@ import numpy as np
 
 from repro.analysis.report import corner_table
 from repro.configs import get_config
-from repro.launch.serve import print_plan
+from repro.launch.serve import print_plan, print_attn_paths
 from repro.models import lm
 from repro.nn.param import init_params
 from repro.serve.engine import ServingEngine, GenRequest
@@ -39,6 +41,9 @@ def main():
                          "variants (pcm, rram, mlc2, mlc4, sram_digital)")
     ap.add_argument("--placement", default="mixed",
                     help="placement preset for the heterogeneous variant")
+    ap.add_argument("--fused-paged-attn", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="fused paged-attention decode kernel (default on)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -56,7 +61,10 @@ def main():
         else:
             cfg = get_config("gemma2-9b", emt_mode=mode, smoke=True,
                              device=args.device)
-        cfg = cfg.replace(dtype=jnp.float32)
+        cfg = cfg.replace(dtype=jnp.float32,
+                          fused_paged_attn=args.fused_paged_attn)
+        if mode == "ideal":
+            print_attn_paths(cfg)       # same resolution for every variant
         # ideal config has no rho params; analog/bitserial reuse ideal weights
         p = params if mode == "ideal" else init_params(
             lm.specs(cfg), jax.random.PRNGKey(0))

@@ -135,8 +135,12 @@ def quantize_tree_for_serving(params):
 
 
 def new_aux():
+    # kv_reads: K/V cache elements actually read by decode attention (billed
+    # only for mask-visible logical positions — zero-block gathers for
+    # unallocated/padded block-table entries are free; models/attention.py).
     return {"energy_pj": jnp.float32(0.0), "reg": jnp.float32(0.0),
-            "reads": jnp.float32(0.0), "cells": 0, "rho_sum": jnp.float32(0.0),
+            "reads": jnp.float32(0.0), "kv_reads": jnp.float32(0.0),
+            "cells": 0, "rho_sum": jnp.float32(0.0),
             "rho_layers": 0, "aux_loss": jnp.float32(0.0), "corners": {}}
 
 

@@ -3,9 +3,15 @@
 The paper's core computation — noisy analog crossbar MACs, plain (technique A) and
 bit-serial decomposed (technique C) — is the performance-critical inner loop of every
 EMT model. `emt_matmul.py` / `emt_bitserial.py` hold the `pl.pallas_call` kernels with
-explicit BlockSpec VMEM tiling, `ops.py` the jit'd wrappers, `ref.py` the pure-jnp
-oracles (bit-exact via the shared counter-hash RNG).
+explicit BlockSpec VMEM tiling, `paged_attention.py` the fused block-table
+decode-attention kernel (vLLM style: the gather happens inside the kernel),
+`ops.py` the jit'd wrappers, `ref.py` the pure-jnp oracles (bit-exact via the
+shared counter-hash RNG; chunk-order-exact for the attention kernel).
+
+See docs/kernels.md for the dispatch ladder (pallas / interpret / ref) and
+block-size tuning guidance.
 """
 from repro.kernels.emt_matmul import emt_matmul_pallas
 from repro.kernels.emt_bitserial import emt_bitserial_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels import ops, ref

@@ -16,6 +16,7 @@ from repro.core.device import DeviceModel
 from repro.kernels import ref as kref
 from repro.kernels.emt_matmul import emt_matmul_pallas
 from repro.kernels.emt_bitserial import emt_bitserial_pallas
+from repro.kernels.paged_attention import NEG_INF, paged_attention_pallas
 
 
 def _pad_to(x, m, axis):
@@ -88,6 +89,57 @@ def _bitserial_jit(xq, w, rho, *, device: DeviceModel, bits: int,
                              seed=seed_static, base_plane=base_plane,
                              bm=bm, bn=bn, bk=bk, interpret=interpret)
     return y[:m, :n].reshape(*lead, n)
+
+
+PAGED_ATTN_IMPLS = ("auto", "pallas", "interpret", "ref")
+
+
+def default_paged_impl() -> str:
+    """Resolve the "auto" paged-attention impl for this process: compiled
+    pallas on TPU, the jnp reference elsewhere (interpret mode is an
+    emulator — correct everywhere, fast nowhere; tests opt into it)."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@partial(jax.jit, static_argnames=("softcap", "impl"))
+def paged_attention(q, k_pool, v_pool, table, mask, *, softcap=0.0,
+                    impl="ref"):
+    """Fused paged-attention decode — jit-stable wrapper + dispatch.
+
+    q (B, KV, G, hd) post-RoPE query token per row; k_pool/v_pool
+    (num_blocks + 1, block_size, KV, hd) serving pools (zero block last);
+    table (B, T) int32 block rows (possibly length-clamped); mask (B, L)
+    additive fp32 over logical positions, L <= T * block_size.
+
+    The wrapper pads the mask rows up to the block-rounded width T*bs with
+    NEG_INF (a ring shorter than one block, say window 8 paged at
+    block_size 16, leaves a partial last chunk) — padded lanes read whatever
+    the block holds and contribute exact zeros.  Returns (B, KV, G, hd) fp32.
+    """
+    if impl not in PAGED_ATTN_IMPLS:
+        raise ValueError(f"unknown paged-attention impl {impl!r}; "
+                         f"known: {PAGED_ATTN_IMPLS}")
+    bs = k_pool.shape[1]
+    T = table.shape[1]
+    L = mask.shape[1]
+    assert L <= T * bs, f"mask rows ({L}) exceed the table view ({T}x{bs})"
+    mask = mask.astype(jnp.float32)
+    if L < T * bs:                           # partial last block: mask it out
+        mask = jnp.pad(mask, ((0, 0), (0, T * bs - L)),
+                       constant_values=NEG_INF)
+    if impl == "ref" or (impl == "auto" and default_paged_impl() == "ref"):
+        out = kref.paged_attention_ref(q, k_pool, v_pool, table, mask,
+                                       softcap=softcap)
+        # Materialization point, matching what the pallas custom-call is on
+        # TPU.  Without it XLA (CPU) fuses the reference's masked-softmax
+        # arithmetic into downstream reductions (e.g. the EMT DAC per-tensor
+        # max) and fully-masked rows (zero-length-encoder slots) come back
+        # NaN — the de-optimized graph is clean, so this is purely an XLA
+        # rewrite hazard (tests/test_paged_attention.py enc-dec harness).
+        return jax.lax.optimization_barrier(out)
+    return paged_attention_pallas(q, k_pool, v_pool, table, mask,
+                                  softcap=softcap,
+                                  interpret=(impl == "interpret"))
 
 
 def emt_bitserial_matmul(xq, w, rho, *, device: DeviceModel, bits=7, seed=0,

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel — fused paged-attention decode (vLLM block-table style).
+
+One query token per batch row attends a block-table-paged KV cache *without
+ever materializing the (B, logical_len, KV, hd) gathered view*: the grid walks
+(batch, kv_head, block-chunk), and each step DMAs exactly one `(block_size,
+head_dim)` K/V tile straight out of the pool, routed through the block table
+inside the kernel (the table is a scalar-prefetch operand, so the
+`table[b, chunk]` lookup happens in the BlockSpec index map — compute goes to
+where the data lives, nothing is gathered up front).
+
+The accumulation is the same online-softmax recurrence the chunked prefill
+path in :func:`repro.models.attention._gqa_core` uses: running (max, sum, acc)
+statistics with `softcap` applied before the additive mask and `NEG_INF`
+masked lanes contributing exact zeros, so fully-masked chunks (zero-block
+reads for unallocated table entries, ring positions not yet written) cannot
+pollute the normalizer.
+
+TPU mapping:
+* grid = (B, KV, num_chunks); the chunk dimension is innermost so the
+  per-(row, head) accumulator scratch stays resident in VMEM across chunks.
+* K/V pools keep their serving layout (num_blocks + 1, block_size, KV, hd);
+  index map (table[b, c], 0, h, 0) pulls one (block_size, hd) tile per step.
+* The additive mask rides along as (B, num_chunks * block_size) fp32 rows —
+  positions beyond the logical length are pre-masked to NEG_INF by the
+  wrapper (kernels/ops.py), which also owns padding and impl dispatch.
+
+Bit-exactness note: the fp32 accumulation *order* differs from the one-shot
+softmax the gather fallback and the jnp reference
+(kernels/ref.py::paged_attention_ref) use, so outputs agree to fp32 rounding
+(~1e-7 relative), which preserves temperature-0 token identity — the
+property the serving harness (tests/test_paged_attention.py) enforces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# The additive-mask sentinel. Single definition for the kernel stack (ops.py
+# and ref.py import it); MUST equal models.common.NEG_INF, which builds the
+# mask rows this kernel thresholds against (kernels cannot import models —
+# layering — so the tie is enforced by tests/test_paged_attention.py).
+NEG_INF = -1e30
+
+
+def _decode_kernel(table_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale, softcap):
+    """One (batch row, kv head, block chunk) grid step."""
+    c = pl.program_id(2)
+    last = pl.num_programs(2) - 1
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                    # (G, hd)
+    k = k_ref[0, :, 0, :]                              # (bs, hd)
+    v = v_ref[0, :, 0, :]                              # (bs, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:                                        # gemma2-style logit cap
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + mask_ref[0][None, :]                       # (G, bs) + (1, bs)
+
+    m_prev = m_ref[...]                                # (G, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # masked lanes must contribute exact zeros even when the whole chunk is
+    # masked; m_safe keeps every exp argument away from sentinel-minus-
+    # sentinel differences (exact in strict fp, NaN-prone under XLA's
+    # reassociating fusions — see kernels/ref.py, which mirrors this)
+    m_safe = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.exp(m_prev - m_safe)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(c == last)
+    def _done():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30))[None, None]
+
+
+def paged_attention_pallas(q, k_pool, v_pool, table, mask, *, softcap=0.0,
+                           interpret=False):
+    """Fused paged-attention decode.
+
+    q:      (B, KV, G, hd) — one post-RoPE query token per row, grouped by
+            kv head (H = KV * G, head h = k * G + g, matching _gqa_core).
+    k_pool: (num_blocks + 1, block_size, KV, hd) serving pool (zero block
+            last; unallocated table entries must already point at it).
+    v_pool: same shape as k_pool.
+    table:  (B, T) int32 block ids — the (possibly length-clamped) block
+            table rows.
+    mask:   (B, T * block_size) additive fp32 rows; logical positions beyond
+            the per-row visible range (and any padding past the logical
+            length) must be NEG_INF.
+
+    Returns (B, KV, G, hd) fp32.
+    """
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    T = table.shape[1]
+    assert mask.shape == (B, T * bs), (mask.shape, (B, T * bs))
+    assert k_pool.shape == v_pool.shape and k_pool.shape[2] == KV
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, c, tab: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, c, tab: (tab[b, c], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, c, tab: (tab[b, c], 0, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, c, tab: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, c, tab: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),       # running max
+            pltpu.VMEM((G, 1), jnp.float32),       # running sum
+            pltpu.VMEM((G, hd), jnp.float32),      # output accumulator
+        ],
+    )
+    kernel = functools.partial(_decode_kernel, scale=1.0 / np.sqrt(hd),
+                               softcap=float(softcap or 0.0))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(table, q, k_pool, v_pool, mask)

@@ -7,10 +7,12 @@ The kernels sample RTN states from global element coordinates through
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import hashrng
 from repro.core.device import DeviceModel
 from repro.core.decompose import bit_plane
+from repro.kernels.paged_attention import NEG_INF
 
 
 def emt_matmul_ref(x, w, rho, *, device: DeviceModel, seed=0, plane=0):
@@ -21,6 +23,46 @@ def emt_matmul_ref(x, w, rho, *, device: DeviceModel, seed=0, plane=0):
         seed, 0, 0, (kdim, n), device.state_offsets, device.state_probs, plane=plane)
     wn = (w.astype(jnp.float32) * (1.0 + offs * sig)).astype(w.dtype)
     return jnp.matmul(x, wn, preferred_element_type=jnp.float32).astype(jnp.float32)
+
+
+def paged_attention_ref(q, k_pool, v_pool, table, mask, *, softcap=0.0):
+    """Oracle for kernels.paged_attention.paged_attention_pallas.
+
+    One-shot masked softmax over the table-gathered view — mathematically
+    identical to the kernel's online-softmax chunk walk (parity is ulp-level:
+    accumulation order differs), with the kernel's masking semantics: a row
+    with no visible lane yields exact zeros, fully-masked lanes contribute
+    exact zeros.  q (B, KV, G, hd); pools (NB+1, bs, KV, hd); table (B, T)
+    int32; mask (B, T*bs) additive fp32.  Returns (B, KV, G, hd) fp32.
+
+    This rung is also the production decode path on CPU hosts (ops.py "auto"
+    dispatch), so it is written for speed there: one fused gather of the
+    *length-clamped* view (the serving engine clamps `table`/`mask` to the
+    live block-rounded bucket, not max_len) + one dense attend.  The
+    never-materialize-the-view property belongs to the pallas rung, where
+    the view would otherwise round-trip through HBM per layer per step.
+    """
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    T = table.shape[1]
+    L = T * bs
+    scale = 1.0 / np.sqrt(hd)
+    kv = k_pool[table].reshape(B, L, KV, hd)           # (B, T, bs, ...) flat
+    vv = v_pool[table].reshape(B, L, KV, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", q, kv,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + mask[:, None, None, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # m_safe keeps the exp argument away from sentinel-minus-sentinel
+    # differences on all-masked rows (exact in strict fp, NaN-prone under
+    # XLA's reassociating fusions inside larger jitted graphs)
+    m_safe = jnp.where(m > NEG_INF / 2, m, 0.0)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_safe), 0.0)
+    acc = jnp.einsum("bkgs,bskh->bkgh", p.astype(vv.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    return acc / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
 
 
 def emt_bitserial_ref(xq, w, rho, *, device: DeviceModel, bits=7, seed=0,

@@ -26,8 +26,14 @@ Flags (new continuous-batching engine):
     --kv-blocks N      global-layer pool size in blocks (default: capacity-
                        equal to the contiguous per-slot regions)
     --kv-ring-blocks N sliding-window-layer pool size in blocks
+    --fused-paged-attn / --no-fused-paged-attn
+                       paged decode through the fused paged-attention kernel
+                       (default on; off = materialized length-clamped gather)
+    --paged-attn-impl  kernel dispatch rung: auto (pallas on TPU, jnp ref
+                       elsewhere) | pallas | interpret | ref (docs/kernels.md)
 
-Reports decode tok/s and per-request EMT energy in uJ/token.
+Reports decode tok/s and per-request EMT energy in uJ/token.  With --paged
+the startup banner prints which attention path each layer resolved to.
 """
 from __future__ import annotations
 
@@ -39,8 +45,27 @@ import numpy as np
 
 from repro.configs import ARCHS, PLACEMENTS, get_config
 from repro.models import lm
+from repro.models.attention import paged_attn_plan
 from repro.nn.param import init_params
 from repro.serve.engine import ServingEngine, GenRequest, prefill_bucket
+
+
+def print_attn_paths(cfg):
+    """Per-layer paged decode-attention path resolution (fused kernel rung or
+    gather fallback + why), grouped into runs of equal resolutions."""
+    plan = paged_attn_plan(cfg)
+    if not plan:
+        return
+    print(f"paged attention paths ({len(plan)} layers):")
+    run = []
+    for path, res in plan + [("", "")]:
+        if run and res != run[0][1]:
+            first, last = run[0][0], run[-1][0]
+            span = first if len(run) == 1 else f"{first} .. {last}"
+            print(f"  {span:56s} -> {run[0][1]} x{len(run)}")
+            run = []
+        if path:
+            run.append((path, res))
 
 
 def print_plan(cfg):
@@ -89,6 +114,14 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--kv-blocks", type=int, default=None)
     ap.add_argument("--kv-ring-blocks", type=int, default=None)
+    ap.add_argument("--fused-paged-attn", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="paged decode through the fused kernel (default on); "
+                         "--no-fused-paged-attn forces the gather fallback")
+    from repro.kernels.ops import PAGED_ATTN_IMPLS
+    ap.add_argument("--paged-attn-impl", default="auto",
+                    choices=list(PAGED_ATTN_IMPLS),
+                    help="fused-kernel dispatch rung (docs/kernels.md)")
     args = ap.parse_args()
     if args.placement and args.device:
         ap.error("--placement and --device are mutually exclusive "
@@ -101,8 +134,12 @@ def main():
     else:
         cfg = get_config(args.arch, emt_mode=args.mode, smoke=args.smoke,
                          device=args.device)
-    cfg = cfg.replace(dtype=jnp.float32)
+    cfg = cfg.replace(dtype=jnp.float32,
+                      fused_paged_attn=args.fused_paged_attn,
+                      paged_attn_impl=args.paged_attn_impl)
     print_plan(cfg)
+    if args.paged:
+        print_attn_paths(cfg)
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     n_req = args.requests or args.batch
     eng = ServingEngine(cfg, params, batch_size=args.batch,
@@ -128,6 +165,11 @@ def main():
     print(f"served {len(results)} requests / {tok_count} tokens in {dt:.2f}s "
           f"({tok_count/dt:.1f} tok/s), EMT energy {total_uj:.3f} uJ "
           f"({total_uj/max(tok_count,1):.4f} uJ/token)")
+    if eng.kv_reads_total:
+        print(f"decode KV reads: {eng.kv_reads_total:.3g} elements "
+              f"({eng.kv_reads_total/max(tok_count,1):.3g}/token; "
+              f"mask-visible positions only — masked/padded positions "
+              f"are free)")
     for r in results[:4]:
         per_tok = r.energy_pj * 1e-6 / max(len(r.tokens), 1)
         print(f"  req{r.rid}: {len(r.tokens)} toks, {per_tok:.4f} uJ/token, "

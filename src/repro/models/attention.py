@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.core.emt_linear import emt_dense, dense_specs, new_aux, add_aux
 from repro.models import common
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, ATTN_KINDS
 from repro.models.context import Ctx
 
 
@@ -114,6 +114,74 @@ def _gqa_core(q, k, v, mask, cfg: ModelConfig, ctx: Ctx):
     return out.reshape(B, Sq, H * hd).astype(v.dtype)
 
 
+def _fused_paged_ok(cfg: ModelConfig) -> bool:
+    """Whether the fused paged-attention kernel serves this config's decode.
+
+    Graceful fallback to the materialized-gather path when the kernel is
+    switched off or the config uses M-RoPE (multimodal position streams are
+    not plumbed through the kernel's mask rows)."""
+    return bool(cfg.fused_paged_attn) and cfg.rope_type != "mrope"
+
+
+def _paged_impl(cfg: ModelConfig) -> str:
+    from repro.kernels import ops as kops     # lazy: kernels depend on core
+    if cfg.paged_attn_impl != "auto":
+        return cfg.paged_attn_impl
+    return kops.default_paged_impl()
+
+
+def paged_attn_plan(cfg: ModelConfig):
+    """Static per-layer decode-attention path resolution for the paged cache.
+
+    Returns (layer_path, resolution) rows — what `launch/serve.py` prints at
+    startup so an operator can see which layers hit the fused kernel (and on
+    which rung of the dispatch ladder) vs the gather fallback, and why.
+    """
+    if not cfg.fused_paged_attn:
+        res = "gather fallback (fused_paged_attn=False)"
+    elif cfg.rope_type == "mrope":
+        res = "gather fallback (mrope unsupported)"
+    else:
+        res = f"fused paged kernel [{_paged_impl(cfg)}]"
+    rows = []
+    for i, kind in enumerate(cfg.blocks()):
+        if kind not in ATTN_KINDS:
+            continue
+        rows.append((f"dec/layer_{i:03d}/attn ({kind})", res))
+        if cfg.is_encdec:
+            rows.append((f"dec/layer_{i:03d}/xattn (cross)", res))
+    return rows
+
+
+def _fused_paged_attend(q, k_pool, v_pool, table, mask_rows, cfg: ModelConfig):
+    """Dispatch one decode step to the fused kernel.
+
+    q (B, 1, H, hd) post-RoPE; pools (num_blocks + 1, bs, KV, hd); table
+    (B, T) int32; mask_rows (B, L) additive fp32 over logical positions.
+    Returns (B, 1, H*hd) in cache dtype — same contract as `_gqa_core`.
+    """
+    from repro.kernels import ops as kops
+    B, Sq, H, hd = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    out = kops.paged_attention(
+        q[:, 0].reshape(B, KV, G, hd), k_pool, v_pool, table, mask_rows,
+        softcap=float(cfg.attn_softcap or 0.0), impl=_paged_impl(cfg))
+    return out.reshape(B, 1, H * hd).astype(k_pool.dtype)
+
+
+def _visible_kv_elems(mask, kv_heads: int, head_dim: int):
+    """K/V cache elements a decode step actually reads: mask-visible logical
+    positions x kv heads x head_dim x 2 (K and V).  Masked positions (NEG_INF
+    lanes — clamped tails, causally-hidden positions, unwritten ring slots)
+    are not reads and must not be billed.  Mask-VISIBLE positions are billed
+    even when they resolve to the zero block (e.g. an idle row's position 0):
+    the engine issues that read, mirroring the energy model's idle-row
+    accounting (engine docstring: idle reads are real, booked as waste)."""
+    vis = jnp.sum((mask > common.NEG_INF / 2).astype(jnp.float32))
+    return vis * jnp.float32(kv_heads * head_dim * 2)
+
+
 def paged_gather(pool, table, length: int):
     """Gather a (B, length, ...) logical view out of a block pool.
 
@@ -142,7 +210,7 @@ def _paged_write(pool, table, wpos, val, active):
 def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
                    tag: str, cache: Optional[dict] = None, cache_index=None,
                    positions3=None, active=None, page_table=None,
-                   page_len: int = 0):
+                   page_len: int = 0, page_ring: Optional[bool] = None):
     """Self-attention. Train/prefill: full-sequence. Decode: one step vs cache.
 
     `cache_index` is a scalar (lockstep decode: every row at the same position)
@@ -152,8 +220,12 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
 
     With `page_table` (B, T) int32 + `page_len` the decode cache is paged: the
     layer's cache entries are block pools and reads/writes go through the
-    block table (`page_len` is the logical per-slot length — max_len for
-    global layers, the window for ring layers).
+    block table (`page_len` is the logical per-slot length — the engine's
+    clamped view for global layers, the window for ring layers).  `page_ring`
+    says whether the table is the window-sized ring table (modular writes +
+    ring position masks) — the caller's layout decision, threaded from
+    `stack.apply_block`; when None (direct callers) it is inferred from
+    `page_len == window`, which is only safe while views are unclamped.
 
     Returns (y, aux, new_cache_entries_or_None).
     """
@@ -169,6 +241,8 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
         k = common.apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
+    fused_y = None
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
     if cache is not None:
         win = cfg.sliding_window
         ring = bool(win) and cache["k"].shape[1] == win
@@ -191,27 +265,40 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
                          "v": v_cache.astype(cache["v"].dtype)}
             # fall through: attend with the prompt-length k, v + caller's mask
         elif page_table is not None:
-            # ---- decode, paged: write through the block table, gather a
-            # logical (B, page_len) view of the pool, attend as usual ---------
+            # ---- decode, paged: write through the block table, then attend
+            # the pool *through* the table — fused kernel (default) reads one
+            # (block_size, hd) tile at a time inside the kernel; the fallback
+            # gathers the (B, page_len) logical view (already length-clamped
+            # by the engine to the live block-rounded bucket, not max_len) ---
             idx = jnp.asarray(cache_index)
             if idx.ndim == 0:                 # lockstep scalar index
                 idx = jnp.broadcast_to(idx, (B,))
             L = page_len
-            ring_paged = bool(win) and L == win
+            ring_paged = page_ring if page_ring is not None \
+                else bool(win) and L == win
             wpos = jnp.mod(idx, L) if ring_paged else idx
             k_cache = _paged_write(cache["k"], page_table, wpos, k[:, 0], active)
             v_cache = _paged_write(cache["v"], page_table, wpos, v[:, 0], active)
             new_cache = {"k": k_cache, "v": v_cache}
-            k = paged_gather(k_cache, page_table, L)
-            v = paged_gather(v_cache, page_table, L)
             if ring_paged:
                 # same modular position arithmetic as the contiguous ring
                 k_pos = idx[:, None] - jnp.mod(
                     idx[:, None] - jnp.arange(L)[None, :], L)      # (B, L)
-                mask = jnp.broadcast_to(
-                    jnp.where(k_pos >= 0, 0.0,
-                              common.NEG_INF)[:, None, None, :], (B, 1, 1, L))
-            # else: caller's mask already covers the logical length L
+                mask_rows = jnp.where(k_pos >= 0, 0.0,
+                                      common.NEG_INF).astype(jnp.float32)
+            else:
+                # caller's mask already covers the logical length L
+                mask_rows = mask.reshape(B, L)
+            aux["kv_reads"] = aux["kv_reads"] + _visible_kv_elems(
+                mask_rows, KV, hd)
+            if _fused_paged_ok(cfg):
+                fused_y = _fused_paged_attend(q, k_cache, v_cache, page_table,
+                                              mask_rows, cfg)
+            else:
+                k = paged_gather(k_cache, page_table, L)
+                v = paged_gather(v_cache, page_table, L)
+                mask = jnp.broadcast_to(mask_rows[:, None, None, :],
+                                        (B, 1, 1, L))
         elif ring:
             # ---- decode, sliding-window layer: ring write + ring attend -----
             # A 32k-cache local layer reads `win` keys, not 32768, and its
@@ -243,6 +330,7 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             mask = jnp.broadcast_to(
                 jnp.where(k_pos >= 0, 0.0, common.NEG_INF)[:, None, None, :],
                 (B, 1, 1, win))
+            aux["kv_reads"] = aux["kv_reads"] + _visible_kv_elems(mask, KV, hd)
             new_cache = {"k": k_cache, "v": v_cache}
             k, v = k_cache, v_cache
         else:
@@ -262,10 +350,13 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
                     k[:, 0].astype(cache["k"].dtype), mode="drop")
                 v_cache = cache["v"].at[rows, write_idx].set(
                     v[:, 0].astype(cache["v"].dtype), mode="drop")
+            if mask is not None:
+                aux["kv_reads"] = aux["kv_reads"] + _visible_kv_elems(
+                    mask, KV, hd)
             new_cache = {"k": k_cache, "v": v_cache}
             k, v = k_cache, v_cache
 
-    y = _gqa_core(q, k, v, mask, cfg, ctx)
+    y = fused_y if fused_y is not None else _gqa_core(q, k, v, mask, cfg, ctx)
     o, a = emt_dense(params["wo"], y, cfg.emt_at(f"{tag}/wo"), tag=f"{tag}/wo",
                      seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
@@ -286,12 +377,26 @@ def cross_attention(params, x, cfg: ModelConfig, *, enc_out=None, enc_mask=None,
                      seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)
     q = q.reshape(*x.shape[:-1], H, hd)
+    fused_y = None
     if enc_out is None and cache is not None and "ck" in cache:
+        B = x.shape[0]
         if page_table is not None:
-            k = paged_gather(cache["ck"], page_table, page_len)
-            v = paged_gather(cache["cv"], page_table, page_len)
+            L = page_len
+            mask_rows = (enc_mask.reshape(B, L) if enc_mask is not None
+                         else jnp.zeros((B, L), jnp.float32))
+            aux["kv_reads"] = aux["kv_reads"] + _visible_kv_elems(
+                mask_rows, KV, hd)
+            if _fused_paged_ok(cfg):
+                fused_y = _fused_paged_attend(q, cache["ck"], cache["cv"],
+                                              page_table, mask_rows, cfg)
+            else:
+                k = paged_gather(cache["ck"], page_table, L)
+                v = paged_gather(cache["cv"], page_table, L)
         else:
             k, v = cache["ck"], cache["cv"]
+            aux["kv_reads"] = aux["kv_reads"] + _visible_kv_elems(
+                enc_mask if enc_mask is not None
+                else jnp.zeros((B, k.shape[1]), jnp.float32), KV, hd)
         new_cache = None
     else:
         k, a = emt_dense(params["wk"], enc_out, cfg.emt_at(f"{tag}/wk"),
@@ -303,7 +408,8 @@ def cross_attention(params, x, cfg: ModelConfig, *, enc_out=None, enc_mask=None,
         k = k.reshape(*enc_out.shape[:-1], KV, hd)
         v = v.reshape(*enc_out.shape[:-1], KV, hd)
         new_cache = {"ck": k, "cv": v}
-    y = _gqa_core(q, k, v, enc_mask, cfg, ctx)
+    y = fused_y if fused_y is not None else _gqa_core(q, k, v, enc_mask,
+                                                      cfg, ctx)
     o, a = emt_dense(params["wo"], y, cfg.emt_at(f"{tag}/wo"), tag=f"{tag}/wo",
                      seed=ctx.seed, key=ctx.key)
     aux = add_aux(aux, a)

@@ -37,6 +37,15 @@ class ModelConfig:
     layer_pattern: Tuple[str, ...] = ("attn",)
     qk_norm: bool = False
     attn_chunk: int = 4096           # KV chunk for online-softmax long-seq path
+    # Paged decode reads K/V blocks through the block table *inside* the
+    # attention kernel (kernels/paged_attention.py) instead of materializing
+    # the (B, logical_len) gathered view per layer per step.  Token-identical
+    # at temperature 0; falls back to the gather path for mrope and when off.
+    fused_paged_attn: bool = True
+    # Kernel dispatch: "auto" = compiled pallas on TPU, jnp reference
+    # elsewhere; "pallas" | "interpret" | "ref" force a rung of the ladder
+    # (docs/kernels.md).
+    paged_attn_impl: str = "auto"
 
     # --- moe ---------------------------------------------------------------
     num_experts: int = 0

@@ -178,10 +178,28 @@ def paged_lens(cfg: ModelConfig, max_len: int) -> dict:
 
     Mirrors the contiguous rule in ``stack.block_state_specs``: sliding-window
     layers hold ``min(window, max_len)`` positions; when the window does not
-    shrink the cache they share the global table (lens equal)."""
+    shrink the cache they share the global table (``ring`` False, lens equal).
+    The explicit ``ring`` flag (not lens equality) routes local layers to the
+    ring table downstream — the engine clamps the global view per decode step
+    (``clamped_lens``), which may transiently equal the ring length."""
     ring = min(cfg.sliding_window, max_len) if cfg.sliding_window else 0
-    has_ring = ring and ring < max_len and "local" in cfg.blocks()
-    return {"global": max_len, "local": ring if has_ring else max_len}
+    has_ring = bool(ring and ring < max_len and "local" in cfg.blocks())
+    return {"global": max_len, "local": ring if has_ring else max_len,
+            "ring": has_ring}
+
+
+def clamped_lens(page_lens_full: dict, view_len: int) -> dict:
+    """Length-clamp the global logical view to ``view_len`` positions.
+
+    ``view_len`` must be block-rounded and cover every live slot's write
+    position (+1); the engine buckets it to a power-of-two block count so the
+    decode step recompiles O(log) times, not once per length.  Ring layers
+    keep their window-sized view — only the global/cross table is clamped."""
+    lens = dict(page_lens_full)
+    lens["global"] = min(int(view_len), page_lens_full["global"])
+    if not lens["ring"]:
+        lens["local"] = lens["global"]
+    return lens
 
 
 def init_paged_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
@@ -198,7 +216,7 @@ def init_paged_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
     for i, kind in enumerate(cfg.blocks()):
         name = f"layer_{i:03d}"
         if kind in stk.ATTN_KINDS:
-            ring = kind == "local" and lens["local"] != lens["global"]
+            ring = kind == "local" and lens["ring"]
             rows = (num_ring_blocks if ring else num_blocks) + 1
             blk = {"k": jax.ShapeDtypeStruct((rows, block_size) + kv_shape,
                                              cfg.dtype),
@@ -280,8 +298,13 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,
     stays frozen until the scheduler prefills a new request into it.
 
     `page_tables` ({"global": (B,Tg), "local": (B,Tl)} int32) + `page_lens`
-    (static {"global": max_len, "local": ring_len}) switch attention layers to
-    the paged block-table cache layout (see lm.init_paged_cache).
+    (static {"global": view_len, "local": ring_len, "ring": bool}) switch
+    attention layers to the paged block-table cache layout (see
+    lm.init_paged_cache).  `page_lens["global"]` is the *view length*: the
+    engine clamps it (and the `Tg` table width) each step to the block-rounded
+    bucket of the furthest live write position instead of max_len — masks,
+    gathers, and the fused kernel's chunk walk all scale with what is actually
+    resident (lm.clamped_lens).
 
     `enc_lens` (B,) int masks enc-dec cross-attention to each row's real
     encoder positions — serving engines cache ck/cv at max_len (zero-padded

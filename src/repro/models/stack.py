@@ -113,16 +113,19 @@ def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
         if page_tables is not None:
             # ring layers page through the window-sized table; local layers
             # whose window >= max_len degenerate to the global table, same as
-            # the contiguous cache layout rule in block_state_specs
-            which = "local" if (kind == "local" and
-                                page_lens["local"] != page_lens["global"]) \
-                else "global"
+            # the contiguous cache layout rule in block_state_specs.  The
+            # explicit "ring" flag (not lens equality) decides: the engine's
+            # per-step view clamp can shrink the global len to the window.
+            has_ring = page_lens.get("ring",
+                                     page_lens["local"] != page_lens["global"])
+            which = "local" if (kind == "local" and has_ring) else "global"
             pt, pl = page_tables[which], page_lens[which]
         y, a, kv = self_attention(
             params["attn"], h, cfg.replace(sliding_window=window),
             positions=positions, mask=m, ctx=ctx, tag=f"{tag}/attn",
             cache=cache, cache_index=cache_index, positions3=positions3,
-            active=active, page_table=pt, page_len=pl or 0)
+            active=active, page_table=pt, page_len=pl or 0,
+            page_ring=(pt is not None and which == "local"))
         aux = add_aux(aux, a)
         if kv:
             new_cache.update(kv)

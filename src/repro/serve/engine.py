@@ -36,10 +36,15 @@ is free or bound to exactly one in-flight request:
   boundary, and everything is freed at retirement.  Admission is gated on the
   free-block budget as well as a free batch row, so an engine can hold many
   more rows than ``max_len``-sized KV regions — short requests no longer
-  strand ``max_len - len`` positions of capacity.  Decode gathers each slot's
-  logical KV view through its table (unallocated entries resolve to a
-  dedicated always-zero block), making paged decode token-identical to the
-  contiguous cache at temperature 0.
+  strand ``max_len - len`` positions of capacity.  Decode attends each slot's
+  blocks *through* its table — by default inside the fused paged-attention
+  kernel (:mod:`repro.kernels.paged_attention`), which reads one block tile
+  at a time and never materializes the logical view; the gather fallback
+  (``cfg.fused_paged_attn=False`` / mrope) materializes a view clamped to the
+  block-rounded bucket of the furthest live position (``view_bucket``), not
+  ``max_len``.  Unallocated entries resolve to a dedicated always-zero block,
+  keeping paged decode token-identical to the contiguous cache at
+  temperature 0.
 * **energy** — the paper's per-step scalar ``energy_pj`` aux is attributed per
   request: prefill energy goes to the admitted request; each decode step's
   energy is split by read counts — every slot (active or idle) issues the same
@@ -114,29 +119,46 @@ def make_serve_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
         next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
                                           sample_seeds, sample_pos)
         return next_tok, cache, {"energy_pj": aux["energy_pj"],
-                                 "corners": aux["corners"]}
+                                 "corners": aux["corners"],
+                                 "kv_reads": aux["kv_reads"]}
 
     return serve_decode_step
+
+
+def view_bucket(need: int, block_size: int, max_len: int) -> int:
+    """Block-rounded power-of-two view length covering `need` positions.
+
+    The paged decode step is jit-static in the logical view length; bucketing
+    the clamp to power-of-two block counts bounds recompiles at O(log
+    max_len/block_size) while still shrinking masks, gathers, and the fused
+    kernel's chunk walk to what live requests actually occupy."""
+    nb = 1
+    while nb * block_size < need:
+        nb *= 2
+    return nb * block_size if nb * block_size < max_len else max_len
 
 
 def make_paged_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules,
                            page_lens: dict):
     """Continuous-batching decode against the paged block-table KV cache:
-    same contract as make_serve_decode_step plus the (B, T) block tables."""
+    same contract as make_serve_decode_step plus the (B, T) block tables
+    (width-clamped by the caller) and the static clamped `view_len` the
+    tables/masks cover this step (lm.clamped_lens; jit once per bucket)."""
     shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
 
     def paged_decode_step(params, cache, tokens, index, active, seed,
                           sample_seeds, sample_pos, temps, top_k, top_p,
-                          enc_lens, table_g, table_l):
+                          enc_lens, table_g, table_l, view_len):
         ctx = Ctx(seed=seed, shard=shard)
         logits, cache, aux = lm.decode_step(
             params, cache, tokens, index, cfg, ctx, active=active,
             page_tables={"global": table_g, "local": table_l},
-            page_lens=page_lens, enc_lens=enc_lens)
+            page_lens=lm.clamped_lens(page_lens, view_len), enc_lens=enc_lens)
         next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
                                           sample_seeds, sample_pos)
         return next_tok, cache, {"energy_pj": aux["energy_pj"],
-                                 "corners": aux["corners"]}
+                                 "corners": aux["corners"],
+                                 "kv_reads": aux["kv_reads"]}
 
     return paged_decode_step
 
@@ -163,8 +185,7 @@ def make_paged_insert(cfg: ModelConfig, block_size: int, page_lens: dict):
             name = f"layer_{i:03d}"
             b, s = big[name], small[name]
             if kind in ATTN_KINDS:
-                ring = (kind == "local" and
-                        page_lens["local"] != page_lens["global"])
+                ring = kind == "local" and page_lens["ring"]
                 e = {}
                 for key in b:
                     row = row_g if (key in ("ck", "cv") or not ring) else row_l
@@ -193,8 +214,7 @@ def make_paged_zero(cfg: ModelConfig, page_lens: dict):
             name = f"layer_{i:03d}"
             b = big[name]
             if kind in ATTN_KINDS:
-                ring = (kind == "local" and
-                        page_lens["local"] != page_lens["global"])
+                ring = kind == "local" and page_lens["ring"]
                 e = {}
                 for key in b:
                     ids = ids_g if (key in ("ck", "cv") or not ring) else ids_l
@@ -284,7 +304,7 @@ class ServingEngine:
         self.paged = bool(paged) and any(k in ATTN_KINDS for k in cfg.blocks())
         if self.paged:
             lens = lm.paged_lens(cfg, max_len)
-            ring_len = lens["local"] if lens["local"] != lens["global"] else 0
+            ring_len = lens["local"] if lens["ring"] else 0
             wg = -(-max_len // block_size)
             wl = -(-ring_len // block_size) if ring_len else 1
             # default pools: capacity-equal to the contiguous per-slot regions
@@ -299,9 +319,10 @@ class ServingEngine:
             self.cache = lm.init_paged_cache(
                 cfg, batch_size, max_len, block_size, num_blocks,
                 num_ring_blocks if ring_len else 0)
+            # view_len is static: one compile per power-of-two block bucket
             self._decode = jax.jit(
                 make_paged_decode_step(cfg, mesh, rules, lens),
-                donate_argnums=(1,))
+                donate_argnums=(1,), static_argnames=("view_len",))
             self._insert = jax.jit(make_paged_insert(cfg, block_size, lens),
                                    donate_argnums=(0,))
             self._zero_retired = jax.jit(make_paged_zero(cfg, lens),
@@ -322,7 +343,11 @@ class ServingEngine:
         self.corner_energy_pj = {}
         self._steps = 0              # global decode-step counter (noise clock)
         self.peak_concurrent = 0     # high-water mark of active slots
-        self._tables_dev = None      # device block tables (None = stale)
+        self._tables_dev = None      # (view_len, tables) on device (None = stale)
+        self.view_len = 0            # last decode step's clamped logical view
+        # decode K/V cache elements actually read (mask-visible positions
+        # only — aux["kv_reads"]); padded/zero-block gathers are not billed
+        self.kv_reads_total = 0.0
 
     def _book_corners(self, corners):
         for name, c in corners.items():
@@ -427,23 +452,34 @@ class ServingEngine:
 
         self.peak_concurrent = max(self.peak_concurrent, len(active))
         extra = ()
+        kwargs = {}
         if self.paged:
             # append-on-decode: a slot crossing a block boundary draws one of
             # its reserved blocks before the step writes at pos
             for i, s in active:
                 if self.scheduler.kv_ensure(i, s.pos):
                     self._tables_dev = None
-            if self._tables_dev is None:      # changed since last upload
+            # clamp the logical view to the block-rounded bucket of the
+            # furthest live write position — masks, gathers, and the fused
+            # kernel walk view_len positions instead of max_len
+            vlen = view_bucket(1 + max(s.pos for _, s in active),
+                               self.block_size, self.max_len)
+            if self._tables_dev is None or self._tables_dev[0] != vlen:
                 tg, tl = self.kv.gather_tables()
-                self._tables_dev = (jnp.asarray(tg), jnp.asarray(tl))
-            extra = self._tables_dev
+                width = -(-vlen // self.block_size)
+                self._tables_dev = (vlen, jnp.asarray(tg[:, :width]),
+                                    jnp.asarray(tl))
+            extra = self._tables_dev[1:]
+            kwargs = {"view_len": vlen}
+            self.view_len = vlen
         step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
         next_tok, self.cache, eaux = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(index),
             jnp.asarray(act), jnp.uint32(step_seed), jnp.asarray(seeds),
             jnp.asarray(spos), jnp.asarray(temps), jnp.asarray(topk),
-            jnp.asarray(topp), jnp.asarray(enc), *extra)
+            jnp.asarray(topp), jnp.asarray(enc), *extra, **kwargs)
         self._steps += 1
+        self.kv_reads_total += float(eaux["kv_reads"])
         e = float(eaux["energy_pj"])
         self._book_corners(eaux["corners"])
         self.total_energy_pj += e

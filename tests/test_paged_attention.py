@@ -1,0 +1,421 @@
+"""Fused paged-attention decode kernel: parity, serving property harness,
+ring-mask boundary arithmetic, length-clamped views, and KV-read accounting.
+
+Layers of coverage, bottom up:
+
+* kernel parity — interpret-mode pallas (online-softmax chunk walk) vs the
+  jnp reference (one-shot masked softmax over the gathered view): ulp-level
+  agreement, and both must match a dense softmax oracle to fp32 rounding,
+  across block sizes, GQA group widths, softcaps, zero-block table entries,
+  and partial last blocks.
+* serving property harness — same style as tests/test_kv_paged.py: the fused
+  engine must be token-identical (temperature 0) to the contiguous cache
+  across randomized arrival patterns / prompt lengths / block sizes, in ideal
+  mode and (with QuantConfig(a_per_row=True)) analog mode, on both the
+  interpret-mode pallas path and the jnp reference.
+* the length-clamped gather fallback stays *bit*-identical: the positions a
+  clamp drops are exactly the causally-masked ones, whose softmax terms are
+  exact zeros.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.models import lm
+from repro.models.attention import paged_attn_plan
+from repro.models.common import NEG_INF
+from repro.models.context import Ctx
+from repro.nn.param import init_params
+from repro.serve.engine import ServingEngine, GenRequest, view_bucket
+from repro.serve.kv_pool import PagedKV
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: interpret-mode pallas vs jnp reference vs dense oracle
+# ---------------------------------------------------------------------------
+def _dense_oracle(q, kp, vp, table, mask, softcap=0.0):
+    """Materialized-gather + one-shot softmax (the fallback path's math)."""
+    B, KV, G, hd = q.shape
+    bs = kp.shape[1]
+    L = mask.shape[1]
+    kv = kp[table].reshape(B, -1, KV, hd)[:, :L]
+    vv = vp[table].reshape(B, -1, KV, hd)[:, :L]
+    s = jnp.einsum("bkgh,bskh->bkgs", q, kv,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + mask[:, None, None, :]
+    return jnp.einsum("bkgs,bskh->bkgh", jax.nn.softmax(s, axis=-1), vv,
+                      preferred_element_type=jnp.float32)
+
+
+def _case(rng, B, KV, G, hd, bs, T, L):
+    NB = B * T + 1
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(NB + 1, bs, KV, hd)),
+                     jnp.float32).at[NB].set(0.0)
+    vp = jnp.asarray(rng.normal(size=(NB + 1, bs, KV, hd)),
+                     jnp.float32).at[NB].set(0.0)
+    table = jnp.asarray(rng.integers(0, NB, size=(B, T)), jnp.int32)
+    table = table.at[:, -1].set(NB)          # unallocated tail -> zero block
+    idx = jnp.asarray(rng.integers(0, L, size=B), jnp.int32)
+    mask = jnp.where(jnp.arange(L)[None, :] <= idx[:, None], 0.0,
+                     NEG_INF).astype(jnp.float32)
+    return q, kp, vp, table, mask
+
+
+@pytest.mark.parametrize("bs,KV,G", [(2, 1, 4), (4, 2, 2), (8, 2, 1)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_kernel_matches_ref_and_oracle(bs, KV, G, softcap):
+    rng = np.random.default_rng(bs * 100 + KV * 10 + G)
+    T = 4
+    q, kp, vp, table, mask = _case(rng, B=3, KV=KV, G=G, hd=16, bs=bs, T=T,
+                                   L=T * bs)
+    y_ref = ops.paged_attention(q, kp, vp, table, mask, softcap=softcap,
+                                impl="ref")
+    y_int = ops.paged_attention(q, kp, vp, table, mask, softcap=softcap,
+                                impl="interpret")
+    # kernel walks chunks online, ref is a one-shot masked softmax: parity
+    # is ulp-level, not bit-exact (same idiom as test_kernels.py for the
+    # EMT matmul kernels)
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               atol=2e-6)
+    # both agree with the one-shot-softmax dense oracle to fp32 rounding
+    y_d = _dense_oracle(q, kp, vp, table, mask, softcap)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_d), atol=2e-6)
+
+
+def test_kernel_partial_last_block():
+    """Logical length not a block multiple (ring window 6 paged at bs=4):
+    the wrapper masks the rounding tail with NEG_INF."""
+    rng = np.random.default_rng(7)
+    q, kp, vp, table, mask = _case(rng, B=2, KV=2, G=2, hd=16, bs=4, T=2, L=8)
+    mask = mask[:, :6]
+    y_ref = ops.paged_attention(q, kp, vp, table, mask, impl="ref")
+    y_int = ops.paged_attention(q, kp, vp, table, mask, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(y_ref),
+                               np.asarray(_dense_oracle(q, kp, vp, table,
+                                                        mask)), atol=2e-6)
+
+
+def test_neg_inf_sentinel_is_shared():
+    """The kernel stack's mask-sentinel threshold must match the sentinel
+    models/common.py writes into mask rows (kernels cannot import models, so
+    the tie is enforced here)."""
+    from repro.kernels.paged_attention import NEG_INF as KERNEL_NEG_INF
+    assert KERNEL_NEG_INF == NEG_INF
+
+
+def test_kernel_fully_masked_row_is_finite():
+    """A row whose mask is all NEG_INF (idle slot / zero-length encoder) must
+    produce zeros, not NaN (the normalizer guard)."""
+    rng = np.random.default_rng(3)
+    q, kp, vp, table, mask = _case(rng, B=2, KV=1, G=2, hd=8, bs=4, T=2, L=8)
+    mask = mask.at[1].set(NEG_INF)
+    for impl in ("ref", "interpret"):
+        y = np.asarray(ops.paged_attention(q, kp, vp, table, mask, impl=impl))
+        assert np.isfinite(y).all()
+        np.testing.assert_array_equal(y[1], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving property harness (fused engine vs contiguous, randomized schedules)
+# ---------------------------------------------------------------------------
+MAX_LEN = 24
+BATCH = 3
+
+
+def _harness_cfg(emt, impl):
+    # one ring (window 8) + one global layer: both fused table paths
+    cfg = get_config("gemma3-1b", emt_mode="analog" if emt == "analog"
+                     else "ideal", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, num_layers=2,
+                      layer_pattern=("local", "global"))
+    if emt == "analog":
+        # per-row DAC scale: analog equivalence is occupancy-independent
+        cfg = cfg.replace(emt=cfg.emt.replace(
+            quant=dataclasses.replace(cfg.emt.quant, a_per_row=True)))
+    if impl is None:
+        cfg = cfg.replace(fused_paged_attn=False)
+    else:
+        cfg = cfg.replace(paged_attn_impl=impl)
+    return cfg
+
+
+def _run_schedule(eng, reqs, arrivals):
+    assert not eng.scheduler.busy
+    order = sorted(range(len(reqs)), key=lambda i: (arrivals[i], i))
+    rid_to_idx, results, step = {}, [], 0
+    while order or eng.scheduler.busy:
+        while order and arrivals[order[0]] <= step:
+            i = order.pop(0)
+            rid_to_idx[eng.submit(reqs[i])] = i
+        results += eng.step()
+        step += 1
+    return {rid_to_idx[r.rid]: r.tokens for r in results}
+
+
+def _check(cfg, block_size, lens, max_new, arrivals, exact=True):
+    rng = np.random.default_rng(sum(lens) + sum(arrivals) + block_size)
+    reqs = [GenRequest(prompt=rng.integers(0, cfg.vocab_size, int(L))
+                       .astype(np.int32), max_new=int(n), seed=i)
+            for i, (L, n) in enumerate(zip(lens, max_new))]
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    kw = dict(batch_size=BATCH, max_len=MAX_LEN, seed=7, fresh_noise=False)
+    want = _run_schedule(ServingEngine(cfg, params, **kw), reqs, arrivals)
+    got = _run_schedule(ServingEngine(cfg, params, paged=True,
+                                      block_size=block_size, **kw),
+                        reqs, arrivals)
+    for i in want:
+        np.testing.assert_array_equal(
+            got[i], want[i],
+            err_msg=f"paged(bs={block_size}) diverged on request {i}")
+
+
+@pytest.mark.parametrize("emt,impl", [
+    ("ideal", "ref"), ("ideal", "interpret"),
+    ("analog", "ref"), ("analog", "interpret"),
+])
+def test_fused_property_harness(emt, impl):
+    """Fused paged decode is token-identical to the contiguous cache at
+    temperature 0 under randomized arrivals — ideal + analog(a_per_row), on
+    the jnp reference and the interpret-mode pallas kernel."""
+    cfg = _harness_cfg(emt, impl)
+    rng = np.random.default_rng(0 if emt == "ideal" else 1)
+    trials = 2 if impl == "ref" else 1       # interpret emulation is slow
+    for _ in range(trials):
+        n = int(rng.integers(2, 5))
+        lens = rng.integers(1, 11, size=n).tolist()
+        max_new = rng.integers(1, 7, size=n).tolist()
+        arrivals = np.sort(rng.integers(0, 6, size=n)).tolist()
+        _check(cfg, int(rng.choice([4, 8])), lens, max_new, arrivals)
+
+
+def test_clamped_gather_fallback_property():
+    """With the fused kernel off, the (now length-clamped) gather fallback
+    must still be token-identical — clamping only drops exact-zero terms."""
+    cfg = _harness_cfg("ideal", None)
+    _check(cfg, 4, lens=[5, 3, 9, 2], max_new=[6, 8, 4, 6],
+           arrivals=[0, 0, 2, 5])
+
+
+def test_fused_plan_report():
+    plan = paged_attn_plan(_harness_cfg("ideal", "ref"))
+    assert len(plan) == 2 and all("fused paged kernel [ref]" in r
+                                  for _, r in plan)
+    plan = paged_attn_plan(_harness_cfg("ideal", None))
+    assert all("gather fallback" in r for _, r in plan)
+    mrope = get_config("qwen2-vl-72b", emt_mode="ideal", smoke=True)
+    assert all("mrope" in r for _, r in paged_attn_plan(mrope))
+
+
+# ---------------------------------------------------------------------------
+# ring-paged mask arithmetic at window boundaries
+# ---------------------------------------------------------------------------
+def _ring_mask_row(idx, win):
+    """The exact arithmetic of models/attention.py's ring-paged decode mask."""
+    k_pos = idx - np.mod(idx - np.arange(win), win)
+    return k_pos >= 0, k_pos
+
+
+@pytest.mark.parametrize("idx", [7, 8, 9, 15, 16, 17])
+def test_ring_mask_boundary_arithmetic(idx, win=8):
+    """At idx == win +/- 1 the ring wraps: slot s must hold position
+    idx - ((idx - s) mod win), visible iff that position exists (>= 0)."""
+    vis, k_pos = _ring_mask_row(idx, win)
+    for s in range(win):
+        # the slot written at position p is p % win; the *latest* position
+        # mapping to slot s that is <= idx:
+        expect_pos = idx - ((idx - s) % win)
+        assert k_pos[s] == expect_pos
+        assert vis[s] == (expect_pos >= 0)
+    # exactly min(idx + 1, win) positions are visible
+    assert vis.sum() == min(idx + 1, win)
+
+
+@pytest.mark.parametrize("start", [6, 7, 8, 9])
+def test_ring_paged_decode_across_window_boundary(start, win=8):
+    """Paged ring decode must track contiguous ring decode bit-exactly (gather
+    fallback) while idx crosses the window: start..start+3 covers idx == win,
+    win +/- 1 for each parametrized start."""
+    cfg = get_config("gemma3-1b", emt_mode="ideal", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, num_layers=2,
+                      layer_pattern=("local", "local"),
+                      fused_paged_attn=False)
+    assert cfg.sliding_window == win
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(1))
+    B, max_len, bs = 2, 16, 4
+    ctx = Ctx(seed=jnp.uint32(0))
+    cache_c = lm.init_cache(cfg, B, max_len)
+    kv = PagedKV(B, max_len, bs, num_blocks=2 * (max_len // bs), ring_len=win,
+                 num_ring_blocks=2 * (win // bs))
+    assert kv.admit(0, start, 8) and kv.admit(1, start, 8)
+    cache_p = lm.init_paged_cache(cfg, B, max_len, bs,
+                                  2 * (max_len // bs), 2 * (win // bs))
+    tg, tl = kv.gather_tables()
+    tables = {"global": jnp.asarray(tg), "local": jnp.asarray(tl)}
+    lens = lm.paged_lens(cfg, max_len)
+    rng = np.random.default_rng(start)
+    cfg_fused = cfg.replace(fused_paged_attn=True, paged_attn_impl="ref")
+    cache_f = jax.tree.map(jnp.copy, cache_p)
+    for idx in range(start, start + 4):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, B), jnp.int32)
+        l_c, cache_c, _ = lm.decode_step(params, cache_c, toks, idx, cfg, ctx)
+        l_p, cache_p, _ = lm.decode_step(params, cache_p, toks, idx, cfg, ctx,
+                                         page_tables=tables, page_lens=lens)
+        np.testing.assert_array_equal(np.asarray(l_c), np.asarray(l_p),
+                                      err_msg=f"ring gather diverged idx={idx}")
+        l_f, cache_f, _ = lm.decode_step(params, cache_f, toks, idx, cfg_fused,
+                                         ctx, page_tables=tables,
+                                         page_lens=lens)
+        np.testing.assert_allclose(np.asarray(l_f), np.asarray(l_c),
+                                   atol=1e-4, rtol=1e-5,
+                                   err_msg=f"ring fused diverged idx={idx}")
+
+
+def test_ring_prompt_longer_than_window():
+    """Prompt length > window: the ring keeps only the tail; paged-fused and
+    contiguous engines must agree token-for-token."""
+    cfg = get_config("gemma3-1b", emt_mode="ideal", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, num_layers=2,
+                      layer_pattern=("local", "global"),
+                      paged_attn_impl="ref")
+    _check(cfg, 4, lens=[12, 14], max_new=[6, 5], arrivals=[0, 1])
+
+
+# ---------------------------------------------------------------------------
+# length-clamped views
+# ---------------------------------------------------------------------------
+def test_view_bucket():
+    assert view_bucket(1, 4, 24) == 4
+    assert view_bucket(5, 4, 24) == 8
+    assert view_bucket(9, 4, 24) == 16
+    assert view_bucket(17, 4, 24) == 24      # pow2 32 > max_len: cap
+    assert view_bucket(24, 4, 24) == 24
+    assert view_bucket(5, 16, 16) == 16
+    assert view_bucket(3, 8, 64) == 8
+
+
+def _clamp_setup():
+    cfg = get_config("gemma3-1b", emt_mode="ideal", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, num_layers=2,
+                      layer_pattern=("local", "global"),
+                      fused_paged_attn=False)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(2))
+    B, max_len, bs = 2, 32, 4
+    kv = PagedKV(B, max_len, bs, num_blocks=2 * (max_len // bs), ring_len=8,
+                 num_ring_blocks=4)
+    assert kv.admit(0, 8, 8) and kv.admit(1, 4, 8)
+    for slot, upto in ((0, 12), (1, 8)):
+        for p in range(upto):
+            kv.ensure(slot, p)
+    cache = lm.init_paged_cache(cfg, B, max_len, bs, 2 * (max_len // bs), 4)
+    return cfg, params, kv, cache, max_len, bs
+
+
+def test_clamped_view_is_bit_identical():
+    """Gather fallback: clamping the logical view to the live block-rounded
+    bucket must not change logits or cache writes at all — dropped positions
+    are exactly the causally-masked zero-contribution ones."""
+    cfg, params, kv, cache, max_len, bs = _clamp_setup()
+    ctx = Ctx(seed=jnp.uint32(0))
+    toks = jnp.asarray([11, 22], jnp.int32)
+    idx = jnp.asarray([11, 7], jnp.int32)
+    tg, tl = kv.gather_tables()
+    lens_full = lm.paged_lens(cfg, max_len)
+    vlen = view_bucket(12, bs, max_len)
+    assert vlen == 16
+    lens_cl = lm.clamped_lens(lens_full, vlen)
+    assert lens_cl["global"] == 16 and lens_cl["local"] == lens_full["local"]
+    full = lm.decode_step(params, cache, toks, idx, cfg, ctx,
+                          page_tables={"global": jnp.asarray(tg),
+                                       "local": jnp.asarray(tl)},
+                          page_lens=lens_full)
+    cl = lm.decode_step(params, jax.tree.map(jnp.copy, cache), toks, idx, cfg,
+                        ctx,
+                        page_tables={"global": jnp.asarray(tg[:, :vlen // bs]),
+                                     "local": jnp.asarray(tl)},
+                        page_lens=lens_cl)
+    np.testing.assert_array_equal(np.asarray(full[0]), np.asarray(cl[0]))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), full[1], cl[1])
+
+
+def test_engine_records_clamped_view():
+    """The engine's decode steps run at the bucketed view length, not
+    max_len, when live requests are short."""
+    cfg = get_config("gemma3-1b", emt_mode="ideal", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, num_layers=2,
+                      layer_pattern=("local", "global"), paged_attn_impl="ref")
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=64, paged=True,
+                        block_size=4, fresh_noise=False)
+    rng = np.random.default_rng(0)
+    eng.serve([GenRequest(prompt=rng.integers(0, cfg.vocab_size, 5)
+                          .astype(np.int32), max_new=4, seed=0)])
+    # bucket 8 prompt + 3 decode steps -> positions < 12 -> 16-view bucket
+    assert eng.view_len == 16 < eng.max_len
+
+
+# ---------------------------------------------------------------------------
+# kv-read accounting (padded positions must not bill)
+# ---------------------------------------------------------------------------
+def _kv_reads_setup(fused_impl):
+    cfg = get_config("gemma3-1b", emt_mode="ideal", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32, num_layers=1,
+                      layer_pattern=("global",), sliding_window=0)
+    if fused_impl is None:
+        cfg = cfg.replace(fused_paged_attn=False)
+    else:
+        cfg = cfg.replace(paged_attn_impl=fused_impl)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(3))
+    return cfg, params
+
+
+@pytest.mark.parametrize("fused_impl", [None, "ref"])
+def test_kv_reads_bill_only_visible_positions(fused_impl):
+    """aux["kv_reads"] counts mask-visible K/V elements: sum(idx+1) positions
+    x kv_heads x head_dim x 2 — identical for fused and gather paths, and
+    invariant to clamping (the clamp only drops already-masked positions)."""
+    cfg, params = _kv_reads_setup(fused_impl)
+    B, max_len, bs = 2, 32, 4
+    kv = PagedKV(B, max_len, bs, num_blocks=2 * (max_len // bs))
+    assert kv.admit(0, 8, 8) and kv.admit(1, 4, 8)
+    for p in range(10):                      # cover the write positions
+        kv.ensure(0, p)
+    for p in range(4):
+        kv.ensure(1, p)
+    cache = lm.init_paged_cache(cfg, B, max_len, bs, 2 * (max_len // bs))
+    tg, tl = kv.gather_tables()
+    ctx = Ctx(seed=jnp.uint32(0))
+    toks = jnp.asarray([1, 2], jnp.int32)
+    idx = jnp.asarray([9, 3], jnp.int32)
+    expect = (10 + 4) * cfg.num_kv_heads * cfg.head_dim * 2
+    lens = lm.paged_lens(cfg, max_len)
+    for vlen in (max_len, 16):
+        width = -(-vlen // bs)
+        _, _, aux = lm.decode_step(
+            params, jax.tree.map(jnp.copy, cache), toks, idx, cfg, ctx,
+            page_tables={"global": jnp.asarray(tg[:, :width]),
+                         "local": jnp.asarray(tl)},
+            page_lens=lm.clamped_lens(lens, vlen))
+        assert float(aux["kv_reads"]) == expect, (vlen, fused_impl)
+
+
+def test_kv_reads_contiguous_decode_matches_paged():
+    """The contiguous decode path bills the same visible-position count."""
+    cfg, params = _kv_reads_setup(None)
+    B, max_len = 2, 32
+    cache = lm.init_cache(cfg, B, max_len)
+    ctx = Ctx(seed=jnp.uint32(0))
+    _, _, aux = lm.decode_step(params, cache, jnp.asarray([1, 2], jnp.int32),
+                               jnp.asarray([9, 3], jnp.int32), cfg, ctx)
+    assert float(aux["kv_reads"]) == \
+        (10 + 4) * cfg.num_kv_heads * cfg.head_dim * 2
