@@ -145,10 +145,15 @@ def main():
     ap.add_argument("--group", type=int, default=2)
     ap.add_argument("--head-dim", type=int, default=64)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the sweep for the CI bench-smoke job")
     args = ap.parse_args()
+    if args.smoke:
+        args.batch = min(args.batch, 4)
+        args.max_len = min(args.max_len, 128)
 
     cases = []
-    for block_size in (8, 16, 32):
+    for block_size in ((8, 16) if args.smoke else (8, 16, 32)):
         for occupancy in (0.25, 1.0):
             cases.append(bench_case(
                 B=args.batch, KV=args.kv_heads, G=args.group,

@@ -27,8 +27,16 @@ Three workloads on a smoke config:
   uJ/token split. The corner split books *all* engine energy (including the
   idle-slot share), so it sums to `engine_total_uj` = `total_uj` (per-request
   billed) + `idle_uj`, not to `total_uj` alone.
+* **shared_prefix** — N requests sharing an L-token header (50% of each
+  prompt), served with refcounted prefix caching off vs on (PR 5): cache hits
+  skip the shared blocks' prefill entirely, so prefill tokens computed and
+  uJ/token must drop roughly with the share ratio (`prefill_tokens_ratio`
+  >= 1.5 at a 50% share), while paged decode stays token-identical to the
+  contiguous engine on the same workload.
 
-Writes a JSON report (tok/s, uJ/token, per-request energy spread) to --out.
+`--smoke` shrinks every scenario (CI bench-smoke job: exceptions fail the
+job, numbers do not).  Writes a JSON report (tok/s, uJ/token, per-request
+energy spread) to --out.
 """
 from __future__ import annotations
 
@@ -86,6 +94,8 @@ def run_workload(cfg, params, reqs, *, stagger, batch=None, max_len=None,
     eng.corner_energy_pj = {}
     eng.peak_concurrent = 0
     eng.kv_reads_total = 0.0
+    eng.prefill_tokens_total = 0
+    eng.cached_prefix_tokens = 0
     t0 = time.time()
     results = eng.serve(reqs, stagger=stagger)
     wall_s = time.time() - t0
@@ -173,7 +183,8 @@ def decode_wave_tok_per_s(cfg, eng, *, batch, prompt_len=8, max_new=64):
     return batch * steps / (time.time() - t0)
 
 
-def run_fused_compare(*, max_len=1024, block_size=16, batch=4, max_new=64):
+def run_fused_compare(*, max_len=1024, block_size=16, batch=4, max_new=64,
+                      waves=4):
     """Equal-batch contiguous vs paged *decode* throughput with the fused
     kernel + clamped views — the step that turns PR 2's capacity win into a
     throughput win.
@@ -204,7 +215,7 @@ def run_fused_compare(*, max_len=1024, block_size=16, batch=4, max_new=64):
     fused = ServingEngine(cfg, params, batch_size=batch, max_len=max_len,
                           paged=True, block_size=block_size)
     vals = {"contiguous": [], "fused_paged": []}
-    for _ in range(4):
+    for _ in range(waves):
         vals["contiguous"].append(decode_wave_tok_per_s(
             cfg, cont, batch=batch, max_new=max_new))
         vals["fused_paged"].append(decode_wave_tok_per_s(
@@ -221,6 +232,100 @@ def run_fused_compare(*, max_len=1024, block_size=16, batch=4, max_new=64):
     out["tok_per_s_ratio"] = round(
         out["fused_paged"]["decode_tok_per_s"] /
         out["contiguous"]["decode_tok_per_s"], 3)
+    return out
+
+
+def run_shared_prefix(*, n_requests=8, header_len=32, tail_len=32, max_new=8,
+                      batch=4, block_size=8, chunk=16, stagger=None):
+    """Prefix caching off vs on at a 50% shared-prefix workload.
+
+    N requests share an `header_len`-token header (system prompt / few-shot
+    header) followed by a unique same-length tail.  With refcounted prefix
+    caching the header's blocks are prefilled once and shared by every later
+    admission, so `prefill_tokens_total` and uJ/token drop with the share
+    ratio; the first request pays full freight.  Requests arrive staggered so
+    the header blocks are registered before the next admission (the realistic
+    serving regime — simultaneous cold arrivals race the registry and simply
+    miss).  Energy/prefill-token numbers are analytic, so the single cold run
+    is exact; wall-clock tok/s includes the same one-off compiles for both
+    engines.  Also asserts paged+cache decode stays token-identical to the
+    contiguous engine on the same workload (frozen noise + per-row DAC scale,
+    the repo's occupancy-independent analog setting).
+    """
+    import dataclasses as _dc
+    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
+    # prefix caching needs an all-global attention stack (ring K/V is
+    # positional and cannot be shared across requests)
+    cfg = cfg.replace(dtype=jnp.float32, layer_pattern=("attn",),
+                      sliding_window=0, paged_attn_impl="ref")
+    cfg = cfg.replace(emt=cfg.emt.replace(
+        quant=_dc.replace(cfg.emt.quant, a_per_row=True)))
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    header = rng.integers(0, cfg.vocab_size, header_len).astype(np.int32)
+    prompts = [np.concatenate([header, rng.integers(0, cfg.vocab_size,
+                                                    tail_len).astype(np.int32)])
+               for _ in range(n_requests)]
+    max_len = header_len + tail_len + max_new
+    if stagger is None:
+        # admit the next request only after the header's blocks registered
+        stagger = -(-header_len // chunk) + 1
+
+    def mk_reqs():
+        return [GenRequest(prompt=p, max_new=max_new, seed=i)
+                for i, p in enumerate(prompts)]
+
+    def mk_engine(**kw):
+        return ServingEngine(cfg, params, batch_size=batch, max_len=max_len,
+                             seed=7, fresh_noise=False, prefill_chunk=chunk,
+                             **kw)
+
+    out = {"arch": cfg.name + "-dense-attn", "n_requests": n_requests,
+           "header_len": header_len, "tail_len": tail_len,
+           "shared_fraction": round(header_len / (header_len + tail_len), 2),
+           "max_new": max_new, "block_size": block_size,
+           "prefill_chunk": chunk, "stagger": stagger}
+    tokens = {}
+    for label, kw in (("cache_off", dict(paged=True, block_size=block_size)),
+                      ("cache_on", dict(paged=True, block_size=block_size,
+                                        prefix_cache=True))):
+        eng = mk_engine(**kw)
+        t0 = time.time()
+        results = eng.serve(mk_reqs(), stagger=stagger)
+        wall = time.time() - t0
+        tokens[label] = {r.rid: r.tokens for r in results}
+        toks = sum(len(r.tokens) for r in results)
+        uj = sum(r.energy_pj for r in results) * 1e-6
+        out[label] = {
+            "prefill_tokens_computed": eng.prefill_tokens_total,
+            "cached_prefix_tokens": eng.cached_prefix_tokens,
+            "decode_steps": eng._steps,
+            "tokens": toks,
+            "tok_per_s": round(toks / wall, 2),
+            "total_uj": round(uj, 4),
+            "uj_per_token": round(uj / toks, 5),
+        }
+        if kw.get("prefix_cache"):
+            eng.kv.check()        # refcount conservation after drain
+            out[label]["pool"] = {
+                "hits": eng.kv.pool_g.hits,
+                "evictions": eng.kv.pool_g.evictions,
+                "cached_blocks_resident": eng.kv.pool_g.num_cached,
+            }
+    cont = mk_engine()
+    cont_tokens = {r.rid: r.tokens for r in cont.serve(mk_reqs(),
+                                                       stagger=stagger)}
+    out["token_identity_paged_vs_contiguous"] = all(
+        np.array_equal(cont_tokens[i], tokens["cache_on"][i])
+        for i in cont_tokens) and all(
+        np.array_equal(cont_tokens[i], tokens["cache_off"][i])
+        for i in cont_tokens)
+    out["prefill_tokens_ratio"] = round(
+        out["cache_off"]["prefill_tokens_computed"]
+        / max(out["cache_on"]["prefill_tokens_computed"], 1), 2)
+    out["uj_per_token_ratio"] = round(
+        out["cache_off"]["uj_per_token"]
+        / max(out["cache_on"]["uj_per_token"], 1e-12), 3)
     return out
 
 
@@ -262,7 +367,14 @@ def main():
                     help="context budget for the fused_paged equal-batch "
                          "compare (long-context regime)")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink every scenario for the CI bench-smoke job "
+                         "(fail on exceptions, not on numbers)")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 4)
+        args.max_new = min(args.max_new, 4)
+        args.fused_max_len = min(args.fused_max_len, 256)
 
     cfg = get_config(args.arch, emt_mode=args.mode, smoke=True)
     cfg = cfg.replace(dtype=jnp.float32)
@@ -281,10 +393,18 @@ def main():
                                args.max_new, mixed=True),
         batch=args.batch, max_len=max_len, stagger=args.stagger)
     report["paged_vs_contiguous"] = run_paged_compare(
-        cfg, params, max_len=args.paged_max_len)
-    report["fused_paged"] = run_fused_compare(max_len=args.fused_max_len)
+        cfg, params, max_len=args.paged_max_len,
+        max_new=min(args.max_new, 8))
+    report["fused_paged"] = run_fused_compare(
+        max_len=args.fused_max_len,
+        max_new=16 if args.smoke else 64)
     report["mixed_placement"] = run_mixed_placement(
         n_requests=args.requests, max_new=args.max_new, batch=args.batch)
+    report["shared_prefix"] = run_shared_prefix(
+        n_requests=4 if args.smoke else 8,
+        header_len=16 if args.smoke else 32,
+        tail_len=16 if args.smoke else 32,
+        max_new=args.max_new, batch=args.batch)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

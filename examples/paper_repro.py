@@ -7,7 +7,6 @@ A+B+C) on the synthetic image task, evaluates each deployed on simulated EMT,
 and prints the Fig. 9-style comparison plus the Fig. 10 robustness sweep.
 """
 import argparse
-import time
 
 from benchmarks.ablation_lib import run_method
 from repro.configs.paper_cnn import vgg_small, resnet_small

@@ -11,7 +11,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticLM
-from repro.models import lm
 from repro.serve.engine import ServingEngine, GenRequest
 from repro.train.optimizer import OptimizerConfig
 from repro.train.step import TrainConfig, make_train_step, init_state

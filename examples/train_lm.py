@@ -16,7 +16,6 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.emt_linear import EMTConfig
 from repro.configs.common import emt_preset
 from repro.data.synthetic import SyntheticLM
 from repro.models.config import ModelConfig

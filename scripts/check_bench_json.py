@@ -1,0 +1,43 @@
+"""Validate the structure of the BENCH_*.json reports.
+
+The CI bench-smoke job runs the benchmark drivers in `--smoke` mode and then
+this checker: a bench that crashes or silently drops a scenario fails the
+job, while the numbers themselves are never gated (CI runners are too noisy
+for thresholds — the checked-in reports carry those).
+
+    python scripts/check_bench_json.py BENCH_serve.json BENCH_kernels.json
+"""
+
+import json
+import sys
+
+REQUIRED = {
+    "BENCH_serve.json": [
+        "lockstep",
+        "staggered",
+        "paged_vs_contiguous",
+        "fused_paged",
+        "mixed_placement",
+        "shared_prefix",
+    ],
+    "BENCH_kernels.json": ["shape", "cases"],
+}
+
+
+def check(path):
+    with open(path) as f:
+        report = json.load(f)
+    name = path.rsplit("/", 1)[-1]
+    missing = [k for k in REQUIRED.get(name, []) if k not in report]
+    if missing:
+        raise SystemExit(f"{path}: missing scenarios {missing}")
+    shared = report.get("shared_prefix")
+    if shared is not None:
+        if not shared.get("token_identity_paged_vs_contiguous", False):
+            raise SystemExit(f"{path}: shared_prefix broke token identity")
+    print(f"{path}: ok ({len(report)} sections)")
+
+
+if __name__ == "__main__":
+    for arg in sys.argv[1:]:
+        check(arg)

@@ -10,7 +10,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.device import DeviceModel
 from repro.kernels import ref as kref

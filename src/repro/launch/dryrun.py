@@ -40,7 +40,7 @@ from repro.nn.param import abstract_params, param_shardings
 from repro.parallel.sharding import RULES, batch_shardings, cache_shardings
 from repro.serve.engine import make_prefill_step, make_decode_step
 from repro.train.optimizer import OptimizerConfig
-from repro.train.step import TrainConfig, jit_train_step, make_state_specs
+from repro.train.step import TrainConfig, jit_train_step
 from repro.utils import tree_param_count
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

@@ -31,6 +31,13 @@ Flags (new continuous-batching engine):
                        (default on; off = materialized length-clamped gather)
     --paged-attn-impl  kernel dispatch rung: auto (pallas on TPU, jnp ref
                        elsewhere) | pallas | interpret | ref (docs/kernels.md)
+    --prefill-chunk N  chunked prefill: prompt tokens admitted per mixed
+                       prefill+decode step (attention-only stacks; default 16)
+    --no-chunked-prefill
+                       force the legacy batch-1 pow2-bucketed prefill path
+    --prefix-cache     refcounted prefix caching (needs --paged, an all-global
+                       attention stack): shared prompt prefixes are served
+                       from resident blocks and bill zero prefill energy
 
 Reports decode tok/s and per-request EMT energy in uJ/token.  With --paged
 the startup banner prints which attention path each layer resolved to.
@@ -122,6 +129,16 @@ def main():
     ap.add_argument("--paged-attn-impl", default="auto",
                     choices=list(PAGED_ATTN_IMPLS),
                     help="fused-kernel dispatch rung (docs/kernels.md)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens admitted per mixed prefill+decode "
+                         "step (chunked prefill)")
+    ap.add_argument("--chunked-prefill", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="force chunked prefill on/off (default: auto — on "
+                         "for decoder-only attention stacks)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prefix caching over the paged pool "
+                         "(requires --paged + all-global attention)")
     args = ap.parse_args()
     if args.placement and args.device:
         ap.error("--placement and --device are mutually exclusive "
@@ -147,7 +164,15 @@ def main():
                         seed=args.seed, fresh_noise=not args.frozen_noise,
                         paged=args.paged, block_size=args.block_size,
                         num_blocks=args.kv_blocks,
-                        num_ring_blocks=args.kv_ring_blocks)
+                        num_ring_blocks=args.kv_ring_blocks,
+                        chunked_prefill=args.chunked_prefill,
+                        prefill_chunk=args.prefill_chunk,
+                        prefix_cache=args.prefix_cache)
+    print(f"prefill path: "
+          f"{'chunked (exact positions, mixed step)' if eng.chunked else 'legacy (batch-1 pow2 buckets)'}"
+          + (f", chunk={eng.prefill_chunk}, prefix_cache=on"
+             if eng.prefix_cache else
+             (f", chunk={eng.prefill_chunk}" if eng.chunked else "")))
     rng = np.random.default_rng(0)
     reqs = [GenRequest(prompt=rng.integers(0, cfg.vocab_size,
                                            size=args.prompt_len).astype(np.int32),
@@ -170,6 +195,15 @@ def main():
               f"({eng.kv_reads_total/max(tok_count,1):.3g}/token; "
               f"mask-visible positions only — masked/padded positions "
               f"are free)")
+    if eng.chunked:
+        line = f"prefill tokens computed: {eng.prefill_tokens_total}"
+        if eng.prefix_cache:
+            line += (f", served from prefix cache: "
+                     f"{eng.cached_prefix_tokens} "
+                     f"(hits {eng.kv.pool_g.hits}, "
+                     f"evictions {eng.kv.pool_g.evictions}, "
+                     f"{eng.kv.pool_g.num_cached} blocks parked)")
+        print(line)
     for r in results[:4]:
         per_tok = r.energy_pj * 1e-6 / max(len(r.tokens), 1)
         print(f"  req{r.rid}: {len(r.tokens)} toks, {per_tok:.4f} uJ/token, "

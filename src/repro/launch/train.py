@@ -14,16 +14,13 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.data.synthetic import SyntheticLM
-from repro.launch.mesh import make_mesh, make_host_mesh
-from repro.models import lm
+from repro.launch.mesh import make_host_mesh
 from repro.parallel.sharding import RULES
-from repro.train.optimizer import OptimizerConfig, Optimizer
-from repro.train.step import (TrainConfig, make_train_step, init_state,
-                              make_state_shardings)
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import TrainConfig, make_train_step, init_state
 from repro.train.loop import LoopConfig, train_loop
 
 

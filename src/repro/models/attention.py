@@ -207,10 +207,106 @@ def _paged_write(pool, table, wpos, val, active):
                                                mode="drop")
 
 
+def _chunk_write(cache_kv, wpos, val, write_ok, page_table=None, ring_len=0):
+    """Scatter a (B, C) chunk of per-position K or V rows into the cache.
+
+    `wpos` (B, C) are absolute write positions, `write_ok` (B, C) marks lanes
+    that really write (valid token, active slot, ring last-writer) — dropped
+    lanes are redirected out of bounds.  Contiguous caches index (row, pos);
+    paged caches resolve (block, offset) through `page_table`.  Ring caches
+    pass `ring_len` and the caller pre-wraps positions."""
+    if page_table is not None:
+        bs = cache_kv.shape[1]
+        blk = jnp.take_along_axis(page_table, wpos // bs, axis=1)
+        blk = jnp.where(write_ok, blk, cache_kv.shape[0])       # OOB: dropped
+        return cache_kv.at[blk, wpos % bs].set(val.astype(cache_kv.dtype),
+                                               mode="drop")
+    B = wpos.shape[0]
+    rows = jnp.arange(B)[:, None]
+    idx = jnp.where(write_ok, wpos, cache_kv.shape[1])          # OOB: dropped
+    return cache_kv.at[rows, idx].set(val.astype(cache_kv.dtype), mode="drop")
+
+
+def _chunk_attend(q, k, v, cache, mask, *, start, ntok, positions, active,
+                  page_table, page_len: int, ring: bool, win: int,
+                  cfg: ModelConfig, ctx: Ctx):
+    """Chunked mixed prefill+decode cache update + attention for one layer.
+
+    Each batch row processes `ntok[b]` real tokens (1 for decode-phase slots,
+    up to C for prefill-phase slots) at absolute positions
+    ``start[b] .. start[b] + ntok[b] - 1``; the remaining lanes are padding
+    (writes dropped, query outputs discarded by the caller).
+
+    * global / non-ring layers: write-then-gather — all chunk K/V land in the
+      cache first, then the row attends its logical view through the caller's
+      causal mask.  A decode row (ntok == 1) therefore sees *exactly* the
+      layout of the pure decode step.
+    * ring layers: chunk writes can overwrite window positions an earlier
+      in-chunk query still needs, so the row attends ``[pre-write ring view |
+      fresh chunk K/V]`` with ring position masks; only the final ``win``
+      lanes of the chunk are written (last-writer-wins).
+
+    Returns (y, new_cache, kv_read_elems).
+    """
+    B, C = positions.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    j = jnp.arange(C)[None, :]
+    valid = j < ntok[:, None]                                   # (B, C)
+    qj = jnp.minimum(j, ntok[:, None] - 1)                      # clamped lane
+    qpos = start[:, None] + qj
+    write_ok = valid
+    if active is not None:
+        write_ok = write_ok & active[:, None]
+
+    if not ring:
+        wpos = positions
+        k_cache = _chunk_write(cache["k"], wpos, k, write_ok, page_table)
+        v_cache = _chunk_write(cache["v"], wpos, v, write_ok, page_table)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if page_table is not None:
+            k_att = paged_gather(k_cache, page_table, page_len)
+            v_att = paged_gather(v_cache, page_table, page_len)
+        else:
+            k_att, v_att = k_cache, v_cache
+        # caller's mask already covers the logical view at the clamped qpos
+        kv_reads = _visible_kv_elems(mask, KV, hd)
+        return (_gqa_core(q, k_att, v_att, mask, cfg, ctx), new_cache,
+                kv_reads)
+
+    # --- ring layer: [old ring view | fresh chunk] with position masks ------
+    wpos = jnp.mod(positions, win)
+    # last-writer-wins: of the chunk lanes mapping to one ring slot only the
+    # final one may write (scatter order over duplicates is unspecified)
+    write_ok = write_ok & (j >= ntok[:, None] - win)
+    k_old = (paged_gather(cache["k"], page_table, win)
+             if page_table is not None else cache["k"])
+    v_old = (paged_gather(cache["v"], page_table, win)
+             if page_table is not None else cache["v"])
+    new_cache = {"k": _chunk_write(cache["k"], wpos, k, write_ok, page_table),
+                 "v": _chunk_write(cache["v"], wpos, v, write_ok, page_table)}
+    # pre-chunk ring slot s holds position p(s) = last - ((last - s) mod win)
+    # for last = start - 1 (start == 0 -> all negative -> masked)
+    last = (start - 1)[:, None]
+    p_old = last - jnp.mod(last - jnp.arange(win)[None, :], win)   # (B, win)
+    ok_old = (p_old[:, None, :] >= 0) & \
+             (qpos[:, :, None] - p_old[:, None, :] < win)          # (B, C, win)
+    # in-chunk lane i visible to query lane j: causal and within the window
+    i = jnp.arange(C)[None, None, :]
+    ok_new = (i <= qj[:, :, None]) & (qj[:, :, None] - i < win)    # (B, C, C)
+    mask_cat = jnp.where(jnp.concatenate([ok_old, ok_new], axis=-1),
+                         0.0, common.NEG_INF).astype(jnp.float32)
+    mask_cat = mask_cat[:, None]                                   # (B,1,C,·)
+    k_att = jnp.concatenate([k_old, k.astype(k_old.dtype)], axis=1)
+    v_att = jnp.concatenate([v_old, v.astype(v_old.dtype)], axis=1)
+    kv_reads = _visible_kv_elems(mask_cat, KV, hd)
+    return _gqa_core(q, k_att, v_att, mask_cat, cfg, ctx), new_cache, kv_reads
+
+
 def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
                    tag: str, cache: Optional[dict] = None, cache_index=None,
                    positions3=None, active=None, page_table=None,
-                   page_len: int = 0, page_ring: Optional[bool] = None):
+                   page_len: int = 0, page_ring: Optional[bool] = None,
+                   chunk_lens=None):
     """Self-attention. Train/prefill: full-sequence. Decode: one step vs cache.
 
     `cache_index` is a scalar (lockstep decode: every row at the same position)
@@ -226,6 +322,13 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
     ring position masks) — the caller's layout decision, threaded from
     `stack.apply_block`; when None (direct callers) it is inferred from
     `page_len == window`, which is only safe while views are unclamped.
+
+    `chunk_lens` (B,) int switches to the chunked mixed prefill+decode path
+    (`lm.chunk_step`): `x` carries a (B, C) chunk per row of which only the
+    first ``chunk_lens[b]`` lanes are real — prefill-phase rows stream their
+    prompt in fixed-size chunks while decode-phase rows ride along with one
+    token (see `_chunk_attend`).  `cache_index` is then the per-row start
+    position and `positions` the (B, C) absolute lane positions.
 
     Returns (y, aux, new_cache_entries_or_None).
     """
@@ -264,6 +367,19 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             new_cache = {"k": k_cache.astype(cache["k"].dtype),
                          "v": v_cache.astype(cache["v"].dtype)}
             # fall through: attend with the prompt-length k, v + caller's mask
+        elif chunk_lens is not None:
+            # ---- chunked mixed prefill+decode: per-row token chunks ---------
+            idx = jnp.asarray(cache_index)
+            ring_here = bool(page_ring) if page_table is not None else ring
+            y, new_cache, reads = _chunk_attend(
+                q, k, v, cache, mask, start=idx, ntok=jnp.asarray(chunk_lens),
+                positions=positions, active=active, page_table=page_table,
+                page_len=page_len, ring=ring_here, win=win, cfg=cfg, ctx=ctx)
+            aux["kv_reads"] = aux["kv_reads"] + reads
+            o, a = emt_dense(params["wo"], y, cfg.emt_at(f"{tag}/wo"),
+                             tag=f"{tag}/wo", seed=ctx.seed, key=ctx.key)
+            aux = add_aux(aux, a)
+            return o, aux, new_cache
         elif page_table is not None:
             # ---- decode, paged: write through the block table, then attend
             # the pool *through* the table — fused kernel (default) reads one

@@ -16,7 +16,6 @@ from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.emt_linear import EMTConfig, emt_dense, dense_specs, new_aux, add_aux
 from repro.core.placement import DevicePlacement, as_placement

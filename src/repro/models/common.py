@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.nn.param import ParamSpec, ones_init, normal_init
-from repro.core.emt_linear import EMTConfig, emt_dense, dense_specs, new_aux
+from repro.core.emt_linear import EMTConfig, emt_dense, dense_specs
 
 
 # ---------------------------------------------------------------------------

@@ -13,11 +13,9 @@ Public API (all functional):
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.emt_linear import new_aux, add_aux
 from repro.core import regularizer
@@ -284,6 +282,63 @@ def _cache_len(cache):
     # the global context
     lens = [blk["k"].shape[1] for blk in cache.values() if "k" in blk]
     return max(lens) if lens else 0
+
+
+def chunk_step(params, cache, tokens, start, ntok, cfg: ModelConfig, ctx: Ctx,
+               active=None, page_tables=None, page_lens=None):
+    """One mixed prefill+decode step over a (B, C) token chunk.
+
+    The continuous-batching engine admits long prompts as a stream of
+    fixed-size chunks interleaved with decode: in one jitted step every batch
+    row advances by ``ntok[b]`` tokens written at absolute positions
+    ``start[b] .. start[b] + ntok[b] - 1`` — up to C prompt tokens for a
+    prefill-phase slot, exactly one generated token for a decode-phase slot
+    (the per-slot phase mask is just ``ntok``; lanes past ``ntok[b]`` are
+    padding whose writes are dropped and whose query positions are clamped to
+    the row's last real lane so no softmax row is ever empty).  This replaces
+    the separate batch-1 power-of-two-bucketed prefill call: prompts occupy
+    their *exact* positions (no left-pad) and the prefill/decode compile split
+    collapses into one compile per (C, view-bucket).
+
+    Only attention-only decoder stacks are supported (recurrent state cannot
+    skip padded lanes; enc-dec needs the encoder pass) — the engine keeps the
+    legacy bucketed path for those.
+
+    Returns (last_valid_logits (B, vocab), new_cache, aux).
+    """
+    B, C = tokens.shape
+    x = common.embed(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    x = x.astype(cfg.dtype)
+    start = jnp.asarray(start)
+    ntok = jnp.asarray(ntok)
+    j = jnp.arange(C)[None, :]
+    wpos = start[:, None] + j                         # (B, C) lane positions
+    qpos = start[:, None] + jnp.minimum(j, ntok[:, None] - 1)
+    L = page_lens["global"] if page_lens else (_cache_len(cache) or 1)
+    k_pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    # write-then-gather (non-ring layers): the view already holds the chunk's
+    # own K/V at their true positions, so the plain causal mask covers both
+    # the cached history and in-chunk attention; ring layers build their own
+    # [ring view | fresh chunk] masks (attention._chunk_attend)
+    masks = {"global": common.causal_mask(qpos, k_pos),
+             "local": common.causal_mask(qpos, k_pos, cfg.sliding_window)}
+
+    h, aux, new_caches = stk.apply_stack(
+        params["decoder"], x, cfg, cfg.blocks(), cfg.moe_layer_mask(), ctx=ctx,
+        tag="dec", positions=wpos, mask=masks, caches=cache, cache_index=start,
+        remat=False, active=active, page_tables=page_tables,
+        page_lens=page_lens, chunk_lens=ntok)
+    # only each row's last real lane feeds sampling (decode rows: their one
+    # token; prefill rows: the final prompt token on their last chunk)
+    h_last = jnp.take_along_axis(h, (ntok - 1)[:, None, None], axis=1)
+    h_last = common.rmsnorm(params["final_norm"], h_last, cfg.norm_eps)
+    logits, a = _logits(params, h_last, cfg, ctx)
+    aux = add_aux(aux, a)
+    merged = {}
+    for k in cache:
+        upd = new_caches.get(k)
+        merged[k] = {**cache[k], **upd} if upd else cache[k]
+    return logits[:, 0], merged, aux
 
 
 def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.emt_linear import emt_dense, dense_specs, new_aux, add_aux
 from repro.nn.param import ParamSpec, constant_init, normal_init

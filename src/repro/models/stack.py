@@ -99,12 +99,18 @@ def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
                 tag: str, ctx: Ctx, positions=None, positions3=None, mask=None,
                 cache: Optional[dict] = None, cache_index=None,
                 enc_out=None, enc_mask=None, active=None, page_tables=None,
-                page_lens=None):
+                page_lens=None, chunk_lens=None):
     """One residual block. Returns (y, aux, new_cache_or_None)."""
     aux = new_aux()
     new_cache = {}
     h = common.rmsnorm(params["norm1"], x, cfg.norm_eps)
 
+    if chunk_lens is not None and kind not in ATTN_KINDS:
+        # recurrent state advances token-by-token; a padded mixed chunk would
+        # march garbage lanes through it — the engine gates these stacks onto
+        # the legacy one-shot prefill path instead
+        raise ValueError(
+            f"chunked prefill requires an attention-only stack, got {kind!r}")
     if kind in ATTN_KINDS:
         window = cfg.sliding_window if kind == "local" else 0
         m = mask["local"] if (kind == "local" and isinstance(mask, dict)) else (
@@ -125,7 +131,8 @@ def apply_block(params, x, cfg: ModelConfig, *, kind: str, use_moe: bool,
             positions=positions, mask=m, ctx=ctx, tag=f"{tag}/attn",
             cache=cache, cache_index=cache_index, positions3=positions3,
             active=active, page_table=pt, page_len=pl or 0,
-            page_ring=(pt is not None and which == "local"))
+            page_ring=(pt is not None and which == "local"),
+            chunk_lens=chunk_lens)
         aux = add_aux(aux, a)
         if kv:
             new_cache.update(kv)
@@ -183,10 +190,26 @@ def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
                 tag: str, positions=None, positions3=None, mask=None,
                 caches: Optional[dict] = None, cache_index=None,
                 enc_out=None, enc_mask=None, remat: bool = False, active=None,
-                page_tables=None, page_lens=None):
+                page_tables=None, page_lens=None, chunk_lens=None):
     """Apply the whole stack. caches: dict layer_name -> block cache."""
     aux = new_aux()
     new_caches = {}
+    lane_ok = None
+    if chunk_lens is not None:
+        # mixed chunk step: lanes past a row's ntok (and whole idle rows) are
+        # padding whose outputs are discarded and writes dropped — but left
+        # alone they would still raise the per-tensor activation (DAC)
+        # quantization max and couple every real token to the padding in
+        # analog mode.  Zero them between blocks: a zero lane contributes
+        # zero K/V-projection writes (dropped anyway) and zero to every
+        # activation max, so real lanes see exactly the statistics they
+        # would in a padding-free batch.
+        C = x.shape[1]
+        lane_ok = jnp.arange(C)[None, :] < jnp.asarray(chunk_lens)[:, None]
+        if active is not None:
+            lane_ok = lane_ok & active[:, None]
+        lane_ok = lane_ok[:, :, None]
+        x = jnp.where(lane_ok, x, 0)
     for i, kind in enumerate(kinds):
         name = f"layer_{i:03d}"
         p = params[name]
@@ -198,7 +221,8 @@ def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
                                positions3=positions3, mask=mask, cache=cache,
                                cache_index=cache_index, enc_out=enc_out,
                                enc_mask=enc_mask, active=active,
-                               page_tables=page_tables, page_lens=page_lens)
+                               page_tables=page_tables, page_lens=page_lens,
+                               chunk_lens=chunk_lens)
 
         if remat:
             x, a, upd = jax.checkpoint(
@@ -208,5 +232,7 @@ def apply_stack(params, x, cfg: ModelConfig, kinds, moe_mask, *, ctx: Ctx,
         aux = add_aux(aux, a)
         if upd is not None:
             new_caches[name] = upd
+        if lane_ok is not None:
+            x = jnp.where(lane_ok, x, 0)
         x = ctx.shard(x, ("batch", "seq", "embed"))
     return x, aux, new_caches

@@ -8,12 +8,10 @@ convergence-safe because the quantization error is re-injected next step.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 
 def _quantize_int8(x, scale_eps=1e-12):

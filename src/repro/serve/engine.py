@@ -11,16 +11,34 @@ cache of shape ``(batch_size, max_len, ...)`` per attention layer.  Each slot
 is free or bound to exactly one in-flight request:
 
 * **admission** — a FIFO :class:`~repro.serve.scheduler.Scheduler` assigns the
-  queue head to a free slot.  The request's prompt is left-padded into a
-  power-of-two length bucket, prefilled alone (batch 1, compiled once per
-  bucket), and the resulting cache/state rows are scattered into the slot's
-  region of the shared cache.  Admission happens *mid-decode*: other slots keep
-  decoding at their own positions and nothing recompiles, because the decode
+  queue head to a free slot.  For decoder-only attention stacks (the default,
+  ``chunked``) admission just binds the request: its prompt then streams into
+  the cache as **chunked prefill** — up to ``prefill_chunk`` tokens per engine
+  step at their *exact* positions, directly into the slot's cache region or
+  pool blocks, through the same mixed step that decodes the other slots
+  (:func:`repro.models.lm.chunk_step`, per-slot phase mask).  There is no
+  power-of-two prompt bucket and no separate batch-1 prefill compile; a long
+  prompt no longer stalls co-tenant decode while it prefills.  Recurrent /
+  enc-dec / mrope stacks keep the legacy path: left-pad into a pow2 bucket,
+  prefill alone (batch 1, compiled once per bucket), scatter into the slot.
+  Admission happens *mid-decode* either way: nothing recompiles, because the
   step's shapes are static in ``batch_size``.
 * **decode** — one jitted step per token for the whole batch.
   :func:`repro.models.lm.decode_step` takes a per-slot ``(B,)`` position vector
   plus an active mask, so slots at different sequence positions share the step;
   retired/free slots flow through the matmuls but their cache rows are frozen.
+  While any slot is still streaming its prompt the engine runs the mixed
+  chunk step instead (decode-phase slots ride along with ``ntok == 1``).
+* **prefix caching** (``prefix_cache=True``; paged + chunked, all-global
+  attention) — full prompt blocks are keyed by a rolling hash of the token
+  prefix and **refcounted** in the :class:`~repro.serve.kv_pool.BlockPool`.
+  A request whose prompt starts with a resident registered chain shares those
+  blocks instead of re-prefilling them: the EMT analog reads that produced
+  that K/V are paid once, and the hit bills zero incremental ``energy_pj`` /
+  ``kv_reads``.  A prompt diverging *inside* a registered block reuses the
+  shared head copy-on-write.  Blocks whose refcount drops to zero park in an
+  LRU cached-free list (still hit-able) and are evicted + re-zeroed only when
+  allocation needs them.
 * **sampling** — :mod:`repro.serve.sampling` draws each slot's next token from
   a pure hash of (request seed, generated-token counter): deterministic per
   request, independent of slot placement and co-tenants.
@@ -68,15 +86,14 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.models.context import Ctx
 from repro.models.stack import ATTN_KINDS
-from repro.nn.param import abstract_params, param_shardings
-from repro.parallel.sharding import (RULES, make_shard_fn, batch_shardings,
-                                     cache_shardings)
+from repro.nn.param import param_shardings
+from repro.parallel.sharding import RULES, make_shard_fn, cache_shardings
 from repro.serve import sampling
 from repro.serve.kv_pool import PagedKV
 from repro.serve.scheduler import Scheduler, Slot
@@ -123,6 +140,57 @@ def make_serve_decode_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
                                  "kv_reads": aux["kv_reads"]}
 
     return serve_decode_step
+
+
+def make_chunk_step(cfg: ModelConfig, mesh: Optional[Mesh], rules,
+                    page_lens: Optional[dict] = None):
+    """One jitted **mixed prefill+decode** step (lm.chunk_step): every batch
+    row advances by `ntok[b]` tokens — a fixed-size chunk of its prompt for
+    prefill-phase slots, one generated token for decode-phase slots — and the
+    row's last real lane is sampled.  Paged engines additionally pass the
+    width-clamped block tables + the static clamped `view_len` (same contract
+    as make_paged_decode_step)."""
+    shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
+
+    def chunk_step(params, cache, tokens, start, ntok, active, seed,
+                   sample_seeds, sample_pos, temps, top_k, top_p,
+                   table_g=None, table_l=None, view_len=0):
+        ctx = Ctx(seed=seed, shard=shard)
+        pt = pl = None
+        if page_lens is not None:
+            pt = {"global": table_g, "local": table_l}
+            pl = lm.clamped_lens(page_lens, view_len)
+        logits, cache, aux = lm.chunk_step(params, cache, tokens, start, ntok,
+                                           cfg, ctx, active=active,
+                                           page_tables=pt, page_lens=pl)
+        next_tok = sampling.sample_tokens(logits, temps, top_k, top_p,
+                                          sample_seeds, sample_pos)
+        return next_tok, cache, {"energy_pj": aux["energy_pj"],
+                                 "corners": aux["corners"],
+                                 "kv_reads": aux["kv_reads"]}
+
+    return chunk_step
+
+
+def make_pool_copy(cfg: ModelConfig):
+    """Copy one global-pool block row src -> dst across every attention
+    layer's K/V pools — the device half of prefix-cache copy-on-write (the
+    donor block's leading rows are our prompt's K/V verbatim; the diverging
+    tail is overwritten by the resuming prefill and never mask-visible)."""
+    kinds = cfg.blocks()
+
+    def copy(big, src, dst):
+        out = {}
+        for i, kind in enumerate(kinds):
+            name = f"layer_{i:03d}"
+            b = big[name]
+            if kind in ATTN_KINDS:
+                out[name] = {key: e.at[dst].set(e[src]) for key, e in b.items()}
+            else:
+                out[name] = b
+        return out
+
+    return copy
 
 
 def view_bucket(need: int, block_size: int, max_len: int) -> int:
@@ -285,7 +353,9 @@ class ServingEngine:
                  mesh: Optional[Mesh] = None, rules=None, seed: int = 0,
                  fresh_noise: bool = True, paged: bool = False,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 num_ring_blocks: Optional[int] = None, placement=None):
+                 num_ring_blocks: Optional[int] = None, placement=None,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_chunk: int = 16, prefix_cache: bool = False):
         if placement is not None:
             # heterogeneous device placement (EMTConfig or DevicePlacement):
             # overrides the config's EMT surface for this engine. Params must
@@ -299,6 +369,22 @@ class ServingEngine:
         self.fresh_noise = fresh_noise
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
         self._sample = jax.jit(sampling.sample_tokens)
+        # chunked prefill (default for decoder-only attention stacks): prompts
+        # stream into the cache in fixed-size chunks through one mixed
+        # prefill+decode step at their exact positions — no pow2 prompt
+        # buckets, no separate batch-1 prefill compile.  Recurrent stacks
+        # (token-serial state), enc-dec (encoder pass), and mrope (3-stream
+        # positions) keep the legacy bucketed path.
+        can_chunk = (all(k in ATTN_KINDS for k in cfg.blocks())
+                     and not cfg.is_encdec and cfg.rope_type != "mrope"
+                     and cfg.input_kind != "embeds")
+        self.chunked = can_chunk if chunked_prefill is None \
+            else bool(chunked_prefill)
+        if self.chunked and not can_chunk:
+            raise ValueError("chunked_prefill requires a decoder-only "
+                             "attention stack without mrope/embeds input")
+        self.prefill_chunk = int(prefill_chunk)
+        assert self.prefill_chunk >= 1
         # paged mode only changes attention caches; pure-recurrent stacks
         # (mamba/xlstm) have nothing to page
         self.paged = bool(paged) and any(k in ATTN_KINDS for k in cfg.blocks())
@@ -327,6 +413,10 @@ class ServingEngine:
                                    donate_argnums=(0,))
             self._zero_retired = jax.jit(make_paged_zero(cfg, lens),
                                          donate_argnums=(0,))
+            if self.chunked:
+                self._chunk = jax.jit(make_chunk_step(cfg, mesh, rules, lens),
+                                      donate_argnums=(1,),
+                                      static_argnames=("view_len",))
             self.scheduler = Scheduler(batch_size, kv=self.kv)
         else:
             self.kv = None
@@ -334,8 +424,24 @@ class ServingEngine:
                                    donate_argnums=(1,))
             self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
             self._zero_retired = jax.jit(self._zero_slot, donate_argnums=(0,))
+            if self.chunked:
+                self._chunk = jax.jit(make_chunk_step(cfg, mesh, rules),
+                                      donate_argnums=(1,))
             self.scheduler = Scheduler(batch_size)
             self.cache = lm.init_cache(cfg, batch_size, max_len)
+        # refcounted prefix caching: shared prompt-prefix blocks are reused
+        # across requests (paged + chunked only; ring/recurrent/enc-dec state
+        # cannot be shared across requests, so those stacks are refused)
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache:
+            if not (self.paged and self.chunked):
+                raise ValueError("prefix_cache requires paged=True and "
+                                 "chunked prefill")
+            if self.page_lens["ring"]:
+                raise ValueError("prefix_cache requires an all-global "
+                                 "attention stack (sliding-window ring K/V is "
+                                 "positional and cannot be shared)")
+            self._pool_copy = jax.jit(make_pool_copy(cfg), donate_argnums=(0,))
         self.total_energy_pj = 0.0
         self.idle_energy_pj = 0.0    # decode energy of idle slots (waste)
         # per-corner energy totals (prefill + decode), keyed by the placement's
@@ -348,6 +454,10 @@ class ServingEngine:
         # decode K/V cache elements actually read (mask-visible positions
         # only — aux["kv_reads"]); padded/zero-block gathers are not billed
         self.kv_reads_total = 0.0
+        # chunked-prefill accounting: prompt tokens actually run through the
+        # model vs served straight from the prefix cache (zero energy/reads)
+        self.prefill_tokens_total = 0
+        self.cached_prefix_tokens = 0
 
     def _book_corners(self, corners):
         for name, c in corners.items():
@@ -387,8 +497,12 @@ class ServingEngine:
 
     # -- streaming API -------------------------------------------------------
     def _bucket_len(self, prompt_len: int) -> int:
-        """Cache positions the prompt occupies: its power-of-two bucket, or the
-        exact length when the bucket would leave no decode room."""
+        """Cache positions the prompt occupies.  Chunked prefill streams the
+        prompt at its exact positions; the legacy one-shot path left-pads into
+        a power-of-two bucket (or prefills at exact length when the bucket
+        would leave no decode room)."""
+        if self.chunked:
+            return prompt_len
         S = prefill_bucket(prompt_len)
         return prompt_len if S >= self.max_len else S
 
@@ -410,8 +524,10 @@ class ServingEngine:
 
     def step(self) -> List[GenResult]:
         """Admit queued requests into free slots (paged: against the
-        free-block budget), then decode one token for every active slot.
-        Returns requests finished this step."""
+        free-block budget), then advance every active slot one step: a mixed
+        prefill+decode chunk step while any slot is still streaming its
+        prompt (chunked mode), a pure decode step otherwise.  Returns
+        requests finished this step."""
         finished = []
         while self.scheduler.pending:
             rid, req = self.scheduler.peek_pending()
@@ -428,6 +544,8 @@ class ServingEngine:
         active = self.scheduler.active_slots()
         if not active:
             return finished
+        if self.chunked and any(s.prefilling for _, s in active):
+            return finished + self._chunk_advance(active)
 
         B = self.batch_size
         tokens = np.zeros(B, np.int32)
@@ -459,34 +577,15 @@ class ServingEngine:
             for i, s in active:
                 if self.scheduler.kv_ensure(i, s.pos):
                     self._tables_dev = None
-            # clamp the logical view to the block-rounded bucket of the
-            # furthest live write position — masks, gathers, and the fused
-            # kernel walk view_len positions instead of max_len
-            vlen = view_bucket(1 + max(s.pos for _, s in active),
-                               self.block_size, self.max_len)
-            if self._tables_dev is None or self._tables_dev[0] != vlen:
-                tg, tl = self.kv.gather_tables()
-                width = -(-vlen // self.block_size)
-                self._tables_dev = (vlen, jnp.asarray(tg[:, :width]),
-                                    jnp.asarray(tl))
-            extra = self._tables_dev[1:]
-            kwargs = {"view_len": vlen}
-            self.view_len = vlen
+            extra, kwargs = self._paged_tables(1 + max(s.pos
+                                                       for _, s in active))
         step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
         next_tok, self.cache, eaux = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(index),
             jnp.asarray(act), jnp.uint32(step_seed), jnp.asarray(seeds),
             jnp.asarray(spos), jnp.asarray(temps), jnp.asarray(topk),
             jnp.asarray(topp), jnp.asarray(enc), *extra, **kwargs)
-        self._steps += 1
-        self.kv_reads_total += float(eaux["kv_reads"])
-        e = float(eaux["energy_pj"])
-        self._book_corners(eaux["corners"])
-        self.total_energy_pj += e
-        # every row issues the same reads per step: bill e/B to each active
-        # slot (occupancy-independent) and book the idle rows' share as waste
-        share = e / B
-        self.idle_energy_pj += share * (B - len(active))
+        share = self._book_step(eaux, len(active))
         next_tok = np.asarray(next_tok)
         for i, s in active:
             s.energy_pj += share
@@ -499,6 +598,131 @@ class ServingEngine:
             if done is not None:
                 finished.append(done)
         return finished
+
+    def _chunk_advance(self, active) -> List[GenResult]:
+        """One mixed prefill+decode step: prefill-phase slots consume up to
+        `prefill_chunk` prompt tokens at their exact positions, decode-phase
+        slots advance one generated token — all in one jitted call with a
+        per-slot phase mask (`ntok`).  Energy is split e/B per row exactly
+        like the pure decode step (every row flows the same C lanes through
+        the crossbars); a prefill row's share accrues to its prefill energy."""
+        B, C = self.batch_size, self.prefill_chunk
+        tokens = np.zeros((B, C), np.int32)
+        start = np.zeros(B, np.int32)
+        ntok = np.ones(B, np.int32)
+        act = np.zeros(B, bool)
+        seeds = np.zeros(B, np.uint32)
+        spos = np.zeros(B, np.int32)
+        temps = np.zeros(B, np.float32)
+        topk = np.zeros(B, np.int32)
+        topp = np.ones(B, np.float32)
+        for i, s in active:
+            act[i] = True
+            seeds[i] = np.uint32(s.req.seed)
+            spos[i] = s.sample_pos
+            temps[i] = s.req.temperature
+            topk[i] = s.req.top_k
+            topp[i] = s.req.top_p
+            start[i] = s.pos
+            if s.prefilling:
+                take = min(C, len(s.prompt) - s.pos)
+                tokens[i, :take] = s.prompt[s.pos:s.pos + take]
+                ntok[i] = take
+            else:
+                tokens[i, 0] = s.last_token
+        self.peak_concurrent = max(self.peak_concurrent, len(active))
+
+        extra = ()
+        kwargs = {}
+        if self.paged:
+            for i, s in active:
+                if not s.prefilling and self.scheduler.kv_ensure(i, s.pos):
+                    self._tables_dev = None
+            extra, kwargs = self._paged_tables(
+                int(max(start[i] + ntok[i] for i, _ in active)))
+        step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
+        next_tok, self.cache, eaux = self._chunk(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(start),
+            jnp.asarray(ntok), jnp.asarray(act), jnp.uint32(step_seed),
+            jnp.asarray(seeds), jnp.asarray(spos), jnp.asarray(temps),
+            jnp.asarray(topk), jnp.asarray(topp), *extra, **kwargs)
+        share = self._book_step(eaux, len(active))
+        next_tok = np.asarray(next_tok)
+        finished = []
+        for i, s in active:
+            if s.prefilling:
+                s.prefill_energy_pj += share
+                s.pos += int(ntok[i])
+                self.prefill_tokens_total += int(ntok[i])
+                if self.paged and self.prefix_cache:
+                    # full prompt blocks just written become shareable
+                    self.kv.register_filled(i, s.pos)
+                if not s.prefilling:        # final chunk: first sampled token
+                    t = int(next_tok[i])
+                    s.last_token = t
+                    s.generated.append(t)
+            else:
+                s.energy_pj += share
+                s.steps += 1
+                s.pos += 1
+                t = int(next_tok[i])
+                s.last_token = t
+                s.generated.append(t)
+            done = self._maybe_retire(i)
+            if done is not None:
+                finished.append(done)
+        return finished
+
+    def _paged_tables(self, need: int):
+        """Stage the width-clamped block tables on device for a step covering
+        `need` positions: zero any prefix-cache evictions first, clamp the
+        logical view to the block-rounded bucket of the furthest live write
+        position (masks, gathers, and the fused kernel walk view_len
+        positions instead of max_len), and re-upload only when the tables or
+        the bucket changed.  Returns (extra_args, kwargs) for the jitted
+        step; shared by the pure decode and mixed chunk paths."""
+        self._zero_evicted()
+        vlen = view_bucket(need, self.block_size, self.max_len)
+        if self._tables_dev is None or self._tables_dev[0] != vlen:
+            tg, tl = self.kv.gather_tables()
+            width = -(-vlen // self.block_size)
+            self._tables_dev = (vlen, jnp.asarray(tg[:, :width]),
+                                jnp.asarray(tl))
+        self.view_len = vlen
+        return self._tables_dev[1:], {"view_len": vlen}
+
+    def _book_step(self, eaux, n_active: int) -> float:
+        """Book one jitted step's aux into the engine totals.  Returns the
+        per-active-slot energy share: every row issues the same crossbar
+        reads per step, so each active slot is billed e/B
+        (occupancy-independent) and the idle rows' share accrues to
+        idle_energy_pj — shared by the pure decode and mixed chunk paths."""
+        self._steps += 1
+        self.kv_reads_total += float(eaux["kv_reads"])
+        e = float(eaux["energy_pj"])
+        self._book_corners(eaux["corners"])
+        self.total_energy_pj += e
+        share = e / self.batch_size
+        self.idle_energy_pj += share * (self.batch_size - n_active)
+        return share
+
+    def _zero_evicted(self):
+        """Zero blocks the prefix cache evicted for reuse — their stale K/V
+        must never be gatherable by the new owner (same hygiene as
+        zero-on-retire for unregistered blocks)."""
+        if not (self.paged and self.prefix_cache):
+            return
+        evicted = self.kv.pool_g.pop_evicted()
+        if not evicted:
+            return
+        for lo in range(0, len(evicted), self.kv.width_g):
+            ids = self._pad_ids(evicted[lo:lo + self.kv.width_g],
+                                self.kv.width_g, self.kv.zero_block_g + 1)
+            empty_l = self._pad_ids([], self.kv.width_l,
+                                    self.kv.zero_block_l + 1)
+            self.cache = self._zero_retired(self.cache, jnp.asarray(ids),
+                                            jnp.asarray(empty_l),
+                                            jnp.int32(0))
 
     def drain(self) -> List[GenResult]:
         """Run step() until queue and slots are empty."""
@@ -533,11 +757,45 @@ class ServingEngine:
 
     # -- internals -----------------------------------------------------------
     def _admit(self, slot_id: int, rid: int, req: GenRequest):
-        """Prefill `req` alone into slot `slot_id` (left-pad into a power-of-two
-        bucket) and sample its first token from the prefill logits.  Paged
-        mode first allocates the slot's blocks (+ decode reservation), then
-        scatters the prefilled contiguous batch-1 cache into them."""
+        """Bind `req` to slot `slot_id`.
+
+        Chunked mode (default for decoder-only attention stacks): allocate
+        the slot's blocks (+ decode reservation) and place the slot in the
+        prefill phase — the prompt streams into the cache chunk by chunk
+        through the mixed step, directly into pool blocks, with no separate
+        prefill call.  With the prefix cache on, admission first walks the
+        prompt's rolling-hash chain: resident shared prefix blocks are
+        refcount-shared (their prefill is skipped entirely — zero incremental
+        energy/kv_reads) and a partially shared tail block is reused
+        copy-on-write.
+
+        Legacy mode (recurrent / enc-dec / mrope stacks): prefill `req` alone
+        into a power-of-two bucket (batch 1, compiled once per bucket) and
+        scatter the rows into the slot's cache region, sampling the first
+        token from the prefill logits."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if self.chunked:
+            pos = 0
+            if self.paged:
+                if self.prefix_cache:
+                    res = self.kv.admit_prefix(slot_id, prompt, req.max_new)
+                    assert res is not None, "admission raced the block budget"
+                    self._tables_dev = None
+                    self._zero_evicted()
+                    if res["cow"] is not None:
+                        src, dst = res["cow"]
+                        self.cache = self._pool_copy(
+                            self.cache, jnp.int32(src), jnp.int32(dst))
+                    pos = res["cached_len"]
+                    self.cached_prefix_tokens += pos
+                else:
+                    ok = self.scheduler.kv_admit(slot_id, len(prompt),
+                                                 req.max_new)
+                    assert ok, "admission raced the block budget"
+                    self._tables_dev = None
+            self.scheduler.place(slot_id, Slot(rid=rid, req=req, pos=pos,
+                                               last_token=0, prompt=prompt))
+            return
         S = self._bucket_len(len(prompt))
         # bucket >= max_len: prefill at exact length (one extra compile for
         # the rare near-capacity prompt); left-pad into the bucket otherwise
@@ -576,6 +834,8 @@ class ServingEngine:
 
     def _maybe_retire(self, slot_id: int) -> Optional[GenResult]:
         s = self.scheduler.slots[slot_id]
+        if not s.generated:
+            return None                  # still streaming its prompt
         if s.req.eos_id is not None and s.generated[-1] == s.req.eos_id:
             reason = "eos"
         elif len(s.generated) >= s.req.max_new:

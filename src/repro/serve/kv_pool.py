@@ -1,4 +1,4 @@
-"""Paged KV cache: block pool allocator + per-slot block tables (host side).
+"""Paged KV cache: refcounted block pool + per-slot block tables (host side).
 
 Instead of one contiguous ``(batch, max_len, ...)`` KV region per slot, the
 paged cache is a shared pool of fixed-size blocks per attention layer:
@@ -10,33 +10,77 @@ paged cache is a shared pool of fixed-size blocks per attention layer:
   written, so gathering through an unallocated table entry reads exact zeros —
   bit-identical to the zero-initialized contiguous cache.  Scatter sentinel
   ``num_blocks + 1`` is out of bounds and dropped (``mode="drop"``).
-* host side — this module.  :class:`BlockPool` is the free-list allocator
-  with *reservation credits*: admission allocates the prompt's blocks and
+* host side — this module.  :class:`BlockPool` is the allocator with
+  *reservation credits*: admission allocates the prompt's blocks and
   reserves the decode worst case, so a request admitted once can never hit an
   out-of-blocks condition mid-decode (``append`` only converts credits).
   :class:`PagedKV` bundles the two id spaces (global/cross layers vs
   sliding-window ring layers) with the per-slot block tables the decode step
   gathers through.
 
+Refcounted prefix caching (PR 5)
+--------------------------------
+Every allocated block carries a **refcount**; full prompt blocks can be
+*registered* under a rolling hash of the token prefix (:func:`prefix_key`:
+``key_i = H(key_{i-1}, tokens[i*bs:(i+1)*bs])``).  A request whose prompt
+starts with an already-resident registered chain **shares** those blocks
+(refcount + 1) instead of re-prefilling them — the EMT analog reads that
+produced that K/V are paid once, and admission bills zero incremental
+``energy_pj``/``kv_reads`` for the hit.  When the prompt diverges *inside* a
+registered block, the shared prefix of that block is reused **copy-on-write**:
+a private block is allocated, the donor's rows are device-copied, and prefill
+resumes at the divergence offset.  Releasing a shared block only decrements
+the refcount; registered blocks whose refcount reaches zero are parked in an
+LRU *cached-free* list — still hit-able, evicted (and re-zeroed by the
+engine) only when allocation needs the capacity.  Unregistered blocks are
+zeroed and blank-freed exactly as before, so with the prefix cache off the
+pool behaves bit-identically to the PR 2 allocator.
+
 The scheduler drives this state: allocate on admission, append on decode when
-a slot's position crosses a block boundary, free (and zero, on device) on
-retirement.
+a slot's position crosses a block boundary, free (decref) on retirement.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 
+def prefix_key(parent: Optional[bytes], tokens) -> bytes:
+    """Rolling hash of one full prompt block, chained through `parent`."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(parent if parent is not None else b"root")
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+def prefix_keys(prompt, block_size: int) -> List[bytes]:
+    """Hash chain over the prompt's *full* blocks (partial tail excluded)."""
+    prompt = np.asarray(prompt, np.int32)
+    keys, parent = [], None
+    for i in range(len(prompt) // block_size):
+        parent = prefix_key(parent, prompt[i * block_size:(i + 1) * block_size])
+        keys.append(parent)
+    return keys
+
+
 class BlockPool:
-    """Fixed-capacity block allocator with reservation credits.
+    """Fixed-capacity refcounted block allocator with reservation credits.
 
     ``alloc(owner, n, reserve=r)`` either hands out ``n`` block ids and
     earmarks ``r`` more for later ``append(owner)`` calls, or returns ``None``
     without any side effects (admission refusal must leave the pool
     consistent).  Free blocks backing reservations are not admission headroom:
     ``num_free`` already subtracts outstanding credits.
+
+    Blocks live in exactly one of three states: **blank-free** (zeroed on
+    device), **cached-free** (refcount 0 but registered under a prefix key —
+    content retained, evictable LRU), or **active** (refcount >= 1, possibly
+    shared by several owners).  Eviction happens lazily inside allocation;
+    evicted ids accumulate until :meth:`pop_evicted` so the engine can zero
+    their stale content on device before the new owner writes.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -46,6 +90,18 @@ class BlockPool:
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._owned: Dict[int, List[int]] = {}
         self._reserved: Dict[int, int] = {}
+        self._ref: Dict[int, int] = {}              # active blocks only
+        # prefix-cache registry
+        self._cached: "OrderedDict[int, bytes]" = OrderedDict()  # bid -> key
+        self._key_to_block: Dict[bytes, int] = {}
+        self._block_key: Dict[int, bytes] = {}      # registered (active+cached)
+        self._key_parent: Dict[bytes, Optional[bytes]] = {}
+        self._key_tokens: Dict[bytes, np.ndarray] = {}
+        self._children: Dict[Optional[bytes], List[bytes]] = {}
+        self._evicted: List[int] = []
+        # counters (reported by the engine / benchmarks)
+        self.hits = 0
+        self.evictions = 0
 
     # -- queries -------------------------------------------------------------
     def blocks_for(self, positions: int) -> int:
@@ -58,8 +114,13 @@ class BlockPool:
 
     @property
     def num_free(self) -> int:
-        """Admission headroom: free blocks not backing a reservation."""
-        return len(self._free) - self.num_reserved
+        """Admission headroom: blank + evictable blocks not backing a
+        reservation."""
+        return len(self._free) + len(self._cached) - self.num_reserved
+
+    @property
+    def num_cached(self) -> int:
+        return len(self._cached)
 
     @property
     def num_owned(self) -> int:
@@ -68,44 +129,158 @@ class BlockPool:
     def owned(self, owner: int) -> List[int]:
         return list(self._owned.get(owner, []))
 
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
     def can(self, blocks: int) -> bool:
         return self.num_free >= blocks
 
+    # -- prefix-cache registry -----------------------------------------------
+    def lookup(self, key: bytes) -> Optional[int]:
+        return self._key_to_block.get(key)
+
+    def key_tokens(self, key: bytes) -> Optional[np.ndarray]:
+        return self._key_tokens.get(key)
+
+    def key_of(self, bid: int) -> Optional[bytes]:
+        return self._block_key.get(bid)
+
+    def children(self, parent: Optional[bytes]) -> List[bytes]:
+        """Keys registered directly under `parent` (partial-tail donors)."""
+        return [k for k in self._children.get(parent, ())
+                if k in self._key_to_block]
+
+    def register(self, bid: int, key: bytes, parent: Optional[bytes],
+                 tokens) -> bool:
+        """Register a *fully written* block under its prefix key.
+
+        First registration wins (a duplicate key keeps pointing at the block
+        already serving hits); a block has at most one key."""
+        if key in self._key_to_block or bid in self._block_key:
+            return False
+        assert self.refcount(bid) >= 1, "registering an unallocated block"
+        self._key_to_block[key] = bid
+        self._block_key[bid] = key
+        self._key_parent[key] = parent
+        self._key_tokens[key] = np.ascontiguousarray(tokens, np.int32).copy()
+        self._children.setdefault(parent, []).append(key)
+        return True
+
+    def _unregister(self, bid: int) -> None:
+        key = self._block_key.pop(bid)
+        del self._key_to_block[key]
+        parent = self._key_parent.pop(key)
+        self._key_tokens.pop(key)
+        self._children[parent].remove(key)
+        if not self._children[parent]:
+            del self._children[parent]
+
     # -- mutation ------------------------------------------------------------
-    def alloc(self, owner: int, blocks: int, reserve: int = 0
-              ) -> Optional[List[int]]:
-        assert owner not in self._owned, f"owner {owner} already holds blocks"
+    def _take_block(self, avoid=()) -> Optional[int]:
+        """Pop a blank block, evicting the LRU cached-free block if needed."""
+        if self._free:
+            return self._free.pop()
+        for bid in self._cached:                    # oldest release first
+            if bid not in avoid:
+                del self._cached[bid]
+                self._unregister(bid)
+                self._evicted.append(bid)
+                self.evictions += 1
+                return bid
+        return None
+
+    def pop_evicted(self) -> List[int]:
+        """Block ids evicted from the prefix cache since the last call — their
+        device content is stale and must be zeroed before the new owner's
+        first gather-visible write."""
+        out, self._evicted = self._evicted, []
+        return out
+
+    def alloc(self, owner: int, blocks: int, reserve: int = 0,
+              extend: bool = False, avoid=()) -> Optional[List[int]]:
+        assert extend or owner not in self._owned, \
+            f"owner {owner} already holds blocks"
         if self.num_free < blocks + reserve:
             return None
-        ids = [self._free.pop() for _ in range(blocks)]
-        self._owned[owner] = ids
+        taken: List[int] = []
+        for _ in range(blocks):
+            bid = self._take_block(avoid=avoid)
+            if bid is None:                         # only avoided evictables
+                self._free.extend(taken)
+                return None
+            taken.append(bid)
+        held = self._owned.setdefault(owner, [])
+        for bid in taken:
+            self._ref[bid] = 1
+            held.append(bid)
         if reserve:
-            self._reserved[owner] = reserve
-        return list(ids)
+            self._reserved[owner] = self._reserved.get(owner, 0) + reserve
+        return list(taken)
+
+    def acquire(self, owner: int, bid: int) -> None:
+        """Share an existing block with `owner` (prefix-cache hit): bump the
+        refcount, reviving it from the cached-free list if parked there."""
+        if bid in self._cached:
+            del self._cached[bid]
+            self._ref[bid] = 1
+        else:
+            assert self._ref.get(bid, 0) >= 1, f"block {bid} is blank-free"
+            self._ref[bid] += 1
+        self._owned.setdefault(owner, []).append(bid)
+        self.hits += 1
 
     def append(self, owner: int) -> int:
         """Convert one of `owner`'s reservation credits into a block."""
         assert self._reserved.get(owner, 0) > 0, \
             f"owner {owner} has no reserved blocks left"
         self._reserved[owner] -= 1
-        bid = self._free.pop()            # safe: alloc() kept credits backed
+        bid = self._take_block()         # safe: alloc() kept credits backed
+        assert bid is not None
+        self._ref[bid] = 1
         self._owned[owner].append(bid)
         return bid
 
     def free(self, owner: int) -> List[int]:
-        """Release all of `owner`'s blocks and credits; returns the block ids."""
-        ids = self._owned.pop(owner, [])
+        """Drop `owner`'s references and credits.  Returns the ids that became
+        **blank** (refcount hit zero, unregistered) — those must be zeroed on
+        device; registered blocks park in the cached-free LRU instead and
+        shared blocks simply lose one reference."""
+        blanks: List[int] = []
+        for bid in self._owned.pop(owner, []):
+            self._ref[bid] -= 1
+            if self._ref[bid] > 0:
+                continue
+            del self._ref[bid]
+            if bid in self._block_key:
+                self._cached[bid] = self._block_key[bid]
+            else:
+                self._free.append(bid)
+                blanks.append(bid)
         self._reserved.pop(owner, None)
-        self._free.extend(ids)
-        return ids
+        return blanks
 
     def check(self) -> None:
-        """Conservation invariant: every block is free xor owned, exactly once."""
-        owned = [b for ids in self._owned.values() for b in ids]
-        assert len(set(owned)) == len(owned), "double-allocated block"
-        assert sorted(owned + self._free) == list(range(self.num_blocks)), \
-            "block leak/duplication"
-        assert len(self._free) >= self.num_reserved, "unbacked reservation"
+        """Conservation: every block is blank xor cached xor active (exactly
+        once), refcounts equal the number of owner references, reservations
+        are backed, and the registry is consistent."""
+        active = sorted(self._ref)
+        assert all(self._ref[b] >= 1 for b in active), "zombie refcount"
+        assert not (set(active) & set(self._free)), "block both active+free"
+        assert not (set(active) & set(self._cached)), "block both active+cached"
+        assert not (set(self._free) & set(self._cached)), "free+cached overlap"
+        assert sorted(active + self._free + list(self._cached)) == \
+            list(range(self.num_blocks)), "block leak/duplication"
+        refs: Dict[int, int] = {}
+        for ids in self._owned.values():
+            for b in ids:
+                refs[b] = refs.get(b, 0) + 1
+        assert refs == self._ref, "refcount != owner references"
+        assert len(self._free) + len(self._cached) >= self.num_reserved, \
+            "unbacked reservation"
+        assert set(self._key_to_block.values()) == set(self._block_key), \
+            "registry out of sync"
+        for bid in self._cached:
+            assert bid in self._block_key, "cached block without a key"
 
 
 class PagedKV:
@@ -120,6 +295,10 @@ class PagedKV:
 
     Host tables store ``-1`` for unallocated; device views substitute the
     gather sentinel (the zero block) or the scatter sentinel (out of bounds).
+
+    Prefix caching operates on the **global** pool only (ring content is a
+    positional window of the request's own stream and recurrent state cannot
+    be shared — the engine refuses ``prefix_cache=True`` for such stacks).
     """
 
     def __init__(self, batch_size: int, max_len: int, block_size: int,
@@ -134,6 +313,10 @@ class PagedKV:
         self.width_l = self.pool_g.blocks_for(ring_len) if ring_len else 1
         self.table_g = np.full((batch_size, self.width_g), -1, np.int64)
         self.table_l = np.full((batch_size, self.width_l), -1, np.int64)
+        # per-slot prefix bookkeeping: the hash chain of the slot's full
+        # prompt blocks + the prompt tokens behind it (register_filled)
+        self._chains: Dict[int, List[bytes]] = {}
+        self._chain_tokens: Dict[int, np.ndarray] = {}
 
     # -- admission sizing ----------------------------------------------------
     def needs(self, prompt_len: int, max_new: int) -> Tuple[int, int, int]:
@@ -181,6 +364,91 @@ class PagedKV:
         self.table_g[slot, :ga] = ids_g
         return True
 
+    def admit_prefix(self, slot: int, prompt, max_new: int) -> Optional[dict]:
+        """Admission with prefix-cache reuse (global pool, chunked prefill).
+
+        Walks the prompt's rolling-hash chain over resident registered blocks:
+        full-block hits are shared (refcount + 1, no prefill); if the prompt
+        diverges *inside* the next registered block, its shared head is reused
+        copy-on-write.  At least one prompt position is always left to
+        recompute — the last prompt token's logits seed sampling.
+
+        Returns ``None`` on refusal (pools untouched) or a dict with
+        ``cached_len`` (prompt positions served from cache) and ``cow``
+        (``(src, dst)`` block ids to device-copy, or ``None``).  The caller
+        must zero ``pool_g.pop_evicted()`` blocks and perform the COW copy
+        before the slot's first step.
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        bs = self.block_size
+        n = len(prompt)
+        keys = prefix_keys(prompt, bs)
+        max_cached = n - 1                  # always recompute >= 1 token
+        hits: List[int] = []
+        parent: Optional[bytes] = None
+        for i, key in enumerate(keys):
+            if (i + 1) * bs > max_cached:
+                break
+            bid = self.pool_g.lookup(key)
+            if bid is None or not np.array_equal(
+                    self.pool_g.key_tokens(key), prompt[i * bs:(i + 1) * bs]):
+                break
+            hits.append(bid)
+            parent = key
+        k = len(hits)
+        # partial-tail donor: a registered sibling block sharing >= 1 leading
+        # token of our block-k tail gets reused copy-on-write
+        cow_src, m = None, 0
+        cap = min(max_cached - k * bs, bs, n - k * bs)
+        if cap > 0:
+            tail = prompt[k * bs:k * bs + cap]
+            for ck in self.pool_g.children(parent):
+                ctoks = self.pool_g.key_tokens(ck)
+                mm = int(np.argmin(np.concatenate(
+                    [ctoks[:len(tail)] == tail, [False]])))
+                if mm > m:
+                    m, cow_src = mm, self.pool_g.lookup(ck)
+
+        ga, gr, _ = self.needs(n, max_new)
+        fresh = ga - k
+        if not self.pool_g.can(fresh + gr):
+            return None
+        for bid in hits:
+            self.pool_g.acquire(slot, bid)
+        avoid = (cow_src,) if cow_src is not None else ()
+        ids = self.pool_g.alloc(slot, fresh, reserve=gr, extend=True,
+                                avoid=avoid)
+        if ids is None and cow_src is not None:
+            # the only evictable block was the donor: forgo the COW reuse
+            cow_src, m = None, 0
+            ids = self.pool_g.alloc(slot, fresh, reserve=gr, extend=True)
+        if ids is None:
+            self.pool_g.free(slot)
+            return None
+        self.table_g[slot, :k] = hits
+        self.table_g[slot, k:ga] = ids
+        cached_len = k * bs + m
+        self._chains[slot] = keys
+        self._chain_tokens[slot] = prompt
+        return {"cached_len": cached_len,
+                "cow": (cow_src, ids[0]) if cow_src is not None else None}
+
+    def register_filled(self, slot: int, filled: int) -> None:
+        """Register the slot's fully-written prompt blocks (prefill frontier
+        at `filled` tokens) so later admissions can share them."""
+        keys = self._chains.get(slot)
+        if not keys:
+            return
+        prompt = self._chain_tokens[slot]
+        bs = self.block_size
+        for i in range(min(filled // bs, len(keys))):
+            bid = int(self.table_g[slot, i])
+            if self.pool_g.key_of(bid) is not None:
+                continue                        # hit or already registered
+            self.pool_g.register(
+                bid, keys[i], keys[i - 1] if i else None,
+                prompt[i * bs:(i + 1) * bs])
+
     def ensure(self, slot: int, pos: int) -> bool:
         """Make position `pos` writable for `slot`, appending a reserved block
         at a block boundary. Returns True if the table changed."""
@@ -192,11 +460,15 @@ class PagedKV:
         return True
 
     def release(self, slot: int) -> Tuple[List[int], List[int]]:
-        """Free `slot`'s blocks (both id spaces) and clear its table rows."""
+        """Drop `slot`'s block references and clear its table rows.  Returns
+        the (global, ring) ids that became blank — the engine zeroes those;
+        shared / prefix-cached blocks survive with their content."""
         g = self.pool_g.free(slot)
         l = self.pool_l.free(slot) if self.pool_l is not None else []
         self.table_g[slot] = -1
         self.table_l[slot] = -1
+        self._chains.pop(slot, None)
+        self._chain_tokens.pop(slot, None)
         return g, l
 
     # -- device views --------------------------------------------------------

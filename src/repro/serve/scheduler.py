@@ -29,13 +29,23 @@ class Slot:
     """One in-flight request bound to a batch row."""
     rid: int                        # request id (submission order)
     req: object                     # the GenRequest
-    pos: int                        # next cache write index (absolute, bucketed)
+    pos: int                        # next cache write index (absolute)
     last_token: int                 # most recently sampled token (decode input)
     generated: List[int] = dataclasses.field(default_factory=list)
     energy_pj: float = 0.0          # decode-energy share accumulated so far
     prefill_energy_pj: float = 0.0
     steps: int = 0                  # decode steps this request participated in
     enc_len: int = 0                # real encoder positions cached (enc-dec)
+    # chunked prefill: the prompt still being streamed into the cache.  While
+    # `pos < len(prompt)` the slot is in the prefill phase: each mixed step
+    # consumes up to `prefill_chunk` prompt tokens at positions [pos, ...)
+    # instead of decoding.  None = legacy one-shot bucketed prefill (the slot
+    # is placed already decoded-ready).
+    prompt: object = None           # np.ndarray prompt tokens, or None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prompt is not None and self.pos < len(self.prompt)
 
     @property
     def sample_pos(self) -> int:

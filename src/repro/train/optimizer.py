@@ -13,11 +13,9 @@ Updates are computed in fp32 regardless of parameter dtype (bf16-safe).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 

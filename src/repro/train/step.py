@@ -8,7 +8,6 @@ loop executes.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -7,6 +7,22 @@ import pytest
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+try:
+    # hypothesis profiles: `ci` (default) keeps property harnesses inside the
+    # tier-1 wall-time budget; the nightly workflow passes
+    # `--hypothesis-profile=nightly` (the hypothesis pytest plugin's flag) to
+    # raise the example budget ~10x.  Inline @settings(...) in test files
+    # inherit every field they don't pin from the active profile, so tests
+    # must NOT hardcode max_examples unless they mean to opt out of nightly.
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=6, deadline=None)
+    settings.register_profile("nightly", max_examples=75, deadline=None,
+                              print_blob=True)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:          # hypothesis is optional outside CI
+    pass
+
 
 def pytest_collection_modifyitems(config, items):
     # tier-1 = the fast verify suite (scripts/run_tier1.sh): everything not

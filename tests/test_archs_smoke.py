@@ -8,8 +8,7 @@ import pytest
 from repro.configs import ARCHS, get_config
 from repro.models import lm
 from repro.models.context import Ctx
-from repro.nn.param import init_params
-from repro.train.optimizer import Optimizer, OptimizerConfig
+from repro.train.optimizer import OptimizerConfig
 from repro.train.step import TrainConfig, make_train_step, init_state
 
 

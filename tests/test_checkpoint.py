@@ -1,7 +1,6 @@
 """Checkpoint manager: roundtrip, integrity, GC, async, elastic-template restore."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,9 +1,8 @@
 """Device-model unit tests: RTN state normalization, sigma(rho), energy."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core.device import DeviceModel, four_state_device, INTENSITY_SCALE
+from repro.core.device import DeviceModel, four_state_device
 
 
 def test_states_unbiased_unit_variance():

@@ -1,7 +1,6 @@
 """EMT dense layer: modes, accounting, technique-B gradients, energy ordering."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import EMTConfig, emt_dense, dense_specs, QuantConfig

@@ -1,7 +1,6 @@
 """Beyond-paper int8 weight-streaming serving mode."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import EMTConfig, emt_dense, dense_specs
 from repro.core.emt_linear import quantize_tree_for_serving

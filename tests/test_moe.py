@@ -7,7 +7,6 @@ from repro.core.emt_linear import IDEAL
 from repro.models.config import ModelConfig
 from repro.models.context import Ctx
 from repro.models import moe
-from repro.models.mlp import mlp_specs, mlp
 from repro.nn.param import init_params
 
 CTX = Ctx()

@@ -360,8 +360,9 @@ def test_engine_records_clamped_view():
     rng = np.random.default_rng(0)
     eng.serve([GenRequest(prompt=rng.integers(0, cfg.vocab_size, 5)
                           .astype(np.int32), max_new=4, seed=0)])
-    # bucket 8 prompt + 3 decode steps -> positions < 12 -> 16-view bucket
-    assert eng.view_len == 16 < eng.max_len
+    # chunked prefill at exact positions: 5-token prompt + 3 decode steps ->
+    # positions < 8 -> 8-view bucket (the pow2 prompt bucket is gone)
+    assert eng.view_len == 8 < eng.max_len
 
 
 # ---------------------------------------------------------------------------

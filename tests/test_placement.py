@@ -2,7 +2,6 @@
 round-tripping (checkpoint metadata), old-config equivalence, and a mixed
 (>= 3 corners) model end-to-end (train grad + serving with per-corner energy
 that sums to the total)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ from repro.configs import get_config, mixed_placement
 from repro.configs.common import emt_preset
 from repro.core.device import (DeviceModel, get_device, register_device,
                                device_names)
-from repro.core.emt_linear import EMTConfig, IDEAL
+from repro.core.emt_linear import IDEAL
 from repro.core.placement import (DevicePlacement, LayerRule, as_placement,
                                   single, emt_for_corner, placement_to_dict,
                                   placement_from_dict, emt_to_dict,

@@ -1,0 +1,261 @@
+"""Refcounted prefix caching: token identity, refcount conservation, energy.
+
+Property harness for PR 5's prefix cache (serve/kv_pool.py + chunked prefill):
+
+* **token identity** — shared-prefix admission with caching on is
+  token-identical at temperature 0 to caching off, in ideal mode and in
+  analog mode with the per-row DAC scale (``a_per_row``), frozen noise —
+  the settings under which stored K/V is exactly what a recompute would
+  produce.
+* **refcount conservation** — randomized submit/drain churn: no block is
+  freed (or its content evicted) while referenced, every block is blank xor
+  cached xor active exactly once, and nothing leaks after drain
+  (``BlockPool.check``).
+* **energy** — a fully cache-hit prefix bills zero incremental prefill
+  tokens/energy/kv_reads: the skipped chunk steps never run.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.nn.param import init_params
+from repro.serve.engine import ServingEngine, GenRequest
+from repro.serve.kv_pool import BlockPool, prefix_keys
+
+BLOCK = 4
+
+
+def _cfg(emt="ideal"):
+    # prefix caching requires an all-global attention stack (no sliding
+    # window ring); analog uses the per-row DAC scale so co-tenant occupancy
+    # cannot perturb tokens (ROADMAP "Known subtlety")
+    cfg = get_config("gemma3-1b", emt_mode=emt, smoke=True)
+    cfg = cfg.replace(
+        dtype=jnp.float32,
+        num_layers=2,
+        layer_pattern=("attn",),
+        sliding_window=0,
+        paged_attn_impl="ref",
+    )
+    if emt == "analog":
+        cfg = cfg.replace(
+            emt=cfg.emt.replace(
+                quant=dataclasses.replace(cfg.emt.quant, a_per_row=True)
+            )
+        )
+    return cfg
+
+
+def _engine(cfg, params, prefix_cache, **kw):
+    kw.setdefault("num_blocks", 24)
+    return ServingEngine(
+        cfg,
+        params,
+        batch_size=2,
+        max_len=32,
+        seed=7,
+        fresh_noise=False,
+        paged=True,
+        block_size=BLOCK,
+        prefill_chunk=8,
+        prefix_cache=prefix_cache,
+        **kw,
+    )
+
+
+def _shared_prefix_requests(cfg, rng, n=4, header=10, tail=6, max_new=4):
+    head = rng.integers(0, cfg.vocab_size, header).astype(np.int32)
+    return [
+        GenRequest(
+            prompt=np.concatenate(
+                [head, rng.integers(0, cfg.vocab_size, tail).astype(np.int32)]
+            ),
+            max_new=max_new,
+            seed=i,
+        )
+        for i in range(n)
+    ]
+
+
+@pytest.mark.parametrize("emt", ["ideal", "analog"])
+def test_token_identity_caching_on_vs_off(emt):
+    cfg = _cfg(emt)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    reqs = _shared_prefix_requests(cfg, rng)
+
+    def run(pc):
+        eng = _engine(cfg, params, pc)
+        res = eng.serve(
+            [
+                GenRequest(prompt=r.prompt, max_new=r.max_new, seed=r.seed)
+                for r in reqs
+            ],
+            stagger=3,
+        )
+        return eng, {r.rid: r.tokens for r in res}
+
+    eng_off, off = run(False)
+    eng_on, on = run(True)
+    for rid in off:
+        np.testing.assert_array_equal(
+            on[rid],
+            off[rid],
+            err_msg=f"prefix cache changed tokens for request {rid} ({emt})",
+        )
+    # the cache actually engaged: later requests skipped the shared header
+    assert eng_on.cached_prefix_tokens >= 2 * BLOCK
+    assert eng_on.prefill_tokens_total < eng_off.prefill_tokens_total
+    eng_on.kv.check()
+
+
+def test_identical_prompt_and_partial_tail_cow():
+    """An identical repeat prompt reuses every full block; a prompt diverging
+    inside a registered block reuses its shared head copy-on-write."""
+    cfg = _cfg()
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+
+    eng = _engine(cfg, params, True)
+    eng.serve([GenRequest(prompt=base, max_new=3, seed=0)])
+    assert eng.cached_prefix_tokens == 0
+
+    # identical prompt: both full blocks shared, only the partial tail runs
+    eng.serve([GenRequest(prompt=base, max_new=3, seed=0)])
+    assert eng.cached_prefix_tokens == 2 * BLOCK
+
+    # diverges at position 6, inside block 1: block 0 is a full hit and
+    # block 1's first two rows are reused copy-on-write
+    fork = base.copy()
+    fork[6:] = (fork[6:] + 1) % cfg.vocab_size
+    eng.serve([GenRequest(prompt=fork, max_new=3, seed=1)])
+    assert eng.cached_prefix_tokens == 2 * BLOCK + BLOCK + 2
+    eng.kv.check()
+
+    # the forked stream matches a cache-off engine bit-exactly
+    ref = _engine(cfg, params, False)
+    want = ref.serve([GenRequest(prompt=fork, max_new=3, seed=1)])
+    got = eng.serve([GenRequest(prompt=fork, max_new=3, seed=1)])
+    np.testing.assert_array_equal(got[0].tokens, want[0].tokens)
+
+
+def test_cache_hit_prefix_bills_zero_incremental_cost():
+    """A resident prefix costs nothing to admit again: zero additional
+    prefill tokens for the shared blocks, and strictly less energy and
+    kv_reads than the cold admission of the same prompt."""
+    cfg = _cfg("analog")
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    eng = _engine(cfg, params, True)
+
+    eng.serve([GenRequest(prompt=prompt, max_new=2, seed=0)])
+    cold_tokens = eng.prefill_tokens_total
+    cold_uj = eng.total_energy_pj
+    cold_reads = eng.kv_reads_total
+    assert cold_tokens == len(prompt)
+
+    (res,) = eng.serve([GenRequest(prompt=prompt, max_new=2, seed=0)])
+    warm_tokens = eng.prefill_tokens_total - cold_tokens
+    warm_uj = eng.total_energy_pj - cold_uj
+    warm_reads = eng.kv_reads_total - cold_reads
+    # all 3 full blocks are resident: 2 as direct hits (the hit walk stops at
+    # len - 1 so the final token's logits are recomputed) and the third's
+    # leading 3 rows via copy-on-write -> only the last prompt token runs
+    assert eng.cached_prefix_tokens == len(prompt) - 1
+    assert warm_tokens == 1
+    assert 0 < warm_uj < cold_uj
+    assert 0 < warm_reads < cold_reads
+    assert res.prefill_energy_pj > 0
+
+
+def test_refcount_conservation_under_churn():
+    """Randomized serve churn over a tight pool: conservation after every
+    drain, shared blocks never freed while referenced, no leak at the end."""
+    cfg = _cfg()
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    head = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng = _engine(cfg, params, True, num_blocks=12)
+    for _ in range(6):
+        n = int(rng.integers(1, 4))
+        reqs = []
+        for i in range(n):
+            tail = rng.integers(0, cfg.vocab_size, int(rng.integers(1, 7)))
+            reqs.append(
+                GenRequest(
+                    prompt=np.concatenate([head, tail.astype(np.int32)]),
+                    max_new=int(rng.integers(1, 4)),
+                    seed=i,
+                )
+            )
+        eng.serve(reqs, stagger=int(rng.integers(0, 3)))
+        eng.kv.check()
+        pool = eng.kv.pool_g
+        # drained: nothing may still hold a reference
+        assert pool.num_owned == 0
+        assert pool.num_free == pool.num_blocks
+    assert eng.kv.pool_g.hits > 0
+
+
+def test_blockpool_refcounts_and_eviction_unit():
+    """Host-side allocator unit test: sharing, LRU eviction, conservation."""
+    pool = BlockPool(4, BLOCK)
+    toks = np.arange(BLOCK, dtype=np.int32)
+    (key,) = prefix_keys(toks, BLOCK)
+
+    ids = pool.alloc(0, 2)
+    assert ids is not None and pool.refcount(ids[0]) == 1
+    pool.register(ids[0], key, None, toks)
+    pool.acquire(1, ids[0])
+    assert pool.refcount(ids[0]) == 2
+    pool.check()
+
+    # owner 0 frees: the shared block survives with refcount 1, the private
+    # one goes blank; no eviction happened
+    blanks = pool.free(0)
+    assert blanks == [ids[1]]
+    assert pool.refcount(ids[0]) == 1
+    pool.check()
+
+    # owner 1 frees: the registered block parks in the cached-free list
+    assert pool.free(1) == []
+    assert pool.num_cached == 1
+    assert pool.lookup(key) == ids[0]
+    pool.check()
+
+    # a full-pool alloc must evict the cached block (and report it for
+    # zeroing), dropping the registration
+    ids2 = pool.alloc(7, 4)
+    assert ids2 is not None
+    assert pool.lookup(key) is None
+    assert pool.pop_evicted() == [ids[0]]
+    pool.check()
+    pool.free(7)
+    assert pool.num_free == pool.num_blocks
+
+
+def test_prefix_cache_requires_supported_stack():
+    cfg = _cfg().replace(layer_pattern=("local", "global"), sliding_window=4)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="all-global"):
+        ServingEngine(
+            cfg,
+            params,
+            batch_size=2,
+            max_len=16,
+            paged=True,
+            block_size=4,
+            prefix_cache=True,
+        )
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(
+            cfg, params, batch_size=2, max_len=16, prefix_cache=True
+        )

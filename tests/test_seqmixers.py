@@ -7,7 +7,6 @@ long_500k decode correct.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.emt_linear import IDEAL
 from repro.models.config import ModelConfig

@@ -2,7 +2,6 @@
 multi-device behaviour is covered by tests/test_distributed.py)."""
 import jax
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.nn.param import logical_to_pspec, ParamSpec, param_shardings

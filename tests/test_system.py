@@ -6,9 +6,6 @@ traditional optimizer, and C cuts deployment energy (Eqs. 18/20, Fig. 9).
 """
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from benchmarks.ablation_lib import (run_method, method_config, train_cnn,

@@ -3,7 +3,6 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticLM
