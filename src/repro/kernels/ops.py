@@ -15,7 +15,9 @@ from repro.core.device import DeviceModel
 from repro.kernels import ref as kref
 from repro.kernels.emt_matmul import emt_matmul_pallas
 from repro.kernels.emt_bitserial import emt_bitserial_pallas
-from repro.kernels.paged_attention import NEG_INF, paged_attention_pallas
+from repro.kernels.paged_attention import (NEG_INF, paged_attention_pallas,
+                                           paged_attention_decode_pallas)
+from repro.kernels.paged_prefill import paged_prefill_pallas
 
 
 def _pad_to(x, m, axis):
@@ -93,6 +95,48 @@ def _bitserial_jit(xq, w, rho, *, device: DeviceModel, bits: int,
 PAGED_ATTN_IMPLS = ("auto", "pallas", "interpret", "ref")
 
 
+def pick_block_chunk(width: int, block_size: int, *, head_dim: int = 128,
+                     dtype_bytes: int = 4, vmem_budget: int = 4 * 2 ** 20):
+    """Blocks streamed per grid step of the paged attention/prefill kernels.
+
+    Occupancy-aware: ``width`` is the (clamped) block-table width — the
+    serving engine shrinks it each step to the block-rounded bucket of the
+    furthest live position (lm.clamped_lens), so table width tracks cache
+    occupancy.  Low occupancy -> narrow table -> the whole view fits one
+    grid step (no online-softmax corrections, no double-buffer churn); a
+    full table walks in ~512-position chunks — large enough to amortize the
+    recurrence and keep the MXU fed per score matmul, small enough that the
+    double buffer (2 slots x K+V tiles) stays well inside the VMEM budget.
+
+    Returns a power of two so padded table widths stay minimal.
+    """
+    if width <= 0:
+        return 1
+    # positions the VMEM budget allows per slot-pair: 2 slots x 2 arrays
+    pos_budget = max(block_size, vmem_budget // (4 * head_dim * dtype_bytes))
+    span_cap = max(block_size, min(512, pos_budget))
+    cpb = max(1, span_cap // block_size)
+    cpb = 1 << (cpb.bit_length() - 1)                  # floor to pow2
+    width_pow2 = 1 << (int(width) - 1).bit_length()    # ceil to pow2
+    return int(min(cpb, width_pow2))
+
+
+def _pad_view(table, mask, k_pool, cpb):
+    """Pad the block table (zero block) and mask rows (NEG_INF) to a
+    block-chunk multiple — padded chunks read the zero block and contribute
+    exact zeros."""
+    T = table.shape[1]
+    pad = (-T) % cpb
+    if pad:
+        zero_blk = k_pool.shape[0] - 1
+        table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=zero_blk)
+        if mask is not None:
+            bs = k_pool.shape[1]
+            mask = jnp.pad(mask, ((0, 0), (0, pad * bs)),
+                           constant_values=NEG_INF)
+    return table, mask
+
+
 def default_paged_impl() -> str:
     """Resolve the "auto" paged-attention impl for this process: compiled
     pallas on TPU, the jnp reference elsewhere (interpret mode is an
@@ -136,9 +180,105 @@ def paged_attention(q, k_pool, v_pool, table, mask, *, softcap=0.0,
         # NaN — the de-optimized graph is clean, so this is purely an XLA
         # rewrite hazard (tests/test_paged_attention.py enc-dec harness).
         return jax.lax.optimization_barrier(out)
+    cpb = pick_block_chunk(T, bs, head_dim=q.shape[-1])
+    table, mask = _pad_view(table, mask, k_pool, cpb)
     return paged_attention_pallas(q, k_pool, v_pool, table, mask,
-                                  softcap=softcap,
+                                  softcap=softcap, block_chunk=cpb,
                                   interpret=(impl == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("softcap", "impl"))
+def paged_attention_decode(q, k_pool, v_pool, table, mask, k_new, v_new,
+                           wpos, active, *, softcap=0.0, impl="ref"):
+    """One-launch decode: fused KV cache write + paged attention.
+
+    On top of :func:`paged_attention`: k_new/v_new (B, KV, hd) are the
+    step's new K/V rows and ``wpos`` (B,) int32 the per-row absolute (or
+    ring-wrapped) write position — row b writes them at
+    ``pool[table[b, wpos[b] // bs], wpos[b] % bs]`` before attending, iff
+    ``active[b]`` (None => all rows write).  The mask rows must already make
+    the written position visible (the decode mask does: position index is
+    causally visible to itself).
+
+    Returns (out (B, KV, G, hd) fp32, k_pool, v_pool) — the returned pools
+    ARE the update (pallas rungs alias them onto the inputs via
+    input_output_aliases; the ref rung scatters functionally), bit-identical
+    to the legacy scatter-then-attend pair (`attention._paged_write` +
+    gather/attend): same cast, same drop semantics for inactive rows.
+    """
+    if impl not in PAGED_ATTN_IMPLS:
+        raise ValueError(f"unknown paged-attention impl {impl!r}; "
+                         f"known: {PAGED_ATTN_IMPLS}")
+    B = q.shape[0]
+    bs = k_pool.shape[1]
+    T = table.shape[1]
+    L = mask.shape[1]
+    assert L <= T * bs, f"mask rows ({L}) exceed the table view ({T}x{bs})"
+    mask = mask.astype(jnp.float32)
+    if L < T * bs:
+        mask = jnp.pad(mask, ((0, 0), (0, T * bs - L)),
+                       constant_values=NEG_INF)
+    wpos = jnp.asarray(wpos, jnp.int32)
+    wblk = jnp.take_along_axis(table, (wpos // bs)[:, None], axis=1)[:, 0]
+    wblk = wblk.astype(jnp.int32)
+    woff = (wpos % bs).astype(jnp.int32)
+    wok = (jnp.ones((B,), jnp.int32) if active is None
+           else jnp.asarray(active).astype(jnp.int32))
+    k_new = k_new.astype(k_pool.dtype)
+    v_new = v_new.astype(v_pool.dtype)
+    if impl == "ref" or (impl == "auto" and default_paged_impl() == "ref"):
+        out, k_pool, v_pool = kref.paged_attention_decode_ref(
+            q, k_pool, v_pool, table, mask, k_new, v_new, wblk, woff, wok,
+            softcap=softcap)
+        # same XLA CPU rewrite hazard as paged_attention (see above)
+        return jax.lax.optimization_barrier((out, k_pool, v_pool))
+    cpb = pick_block_chunk(T, bs, head_dim=q.shape[-1])
+    table, mask = _pad_view(table, mask, k_pool, cpb)
+    return paged_attention_decode_pallas(
+        q, k_pool, v_pool, table, mask, k_new, v_new, wblk, woff, wok,
+        softcap=softcap, block_chunk=cpb, interpret=(impl == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("softcap", "impl"))
+def paged_prefill(q, k_pool, v_pool, table, qpos, *, softcap=0.0,
+                  impl="ref"):
+    """Flash-style chunked prefill through the block table.
+
+    q (B, C, H, hd) post-RoPE query chunk (the chunk's K/V must already be
+    written to the pools — write-then-attend, like the legacy path);
+    qpos (B, C) int32 absolute per-lane query positions, padding lanes
+    clamped to the row's last real lane (lm.chunk_step's convention).
+    Causality is derived from qpos — no materialized mask.
+
+    Returns (B, C, H * hd) fp32 — the `_gqa_core` output contract, sans the
+    final cache-dtype cast (the caller owns it).
+    """
+    if impl not in PAGED_ATTN_IMPLS:
+        raise ValueError(f"unknown paged-attention impl {impl!r}; "
+                         f"known: {PAGED_ATTN_IMPLS}")
+    B, C, H, hd = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    bs = k_pool.shape[1]
+    T = table.shape[1]
+    # regroup (B, C, H, hd) -> (B, KV, C*G, hd): kv head to a grid axis,
+    # chunk lanes x group heads fused into the query-tile rows (row c*G + g)
+    qt = q.reshape(B, C, KV, G, hd).transpose(0, 2, 1, 3, 4)
+    qt = qt.reshape(B, KV, C * G, hd)
+    qpe = jnp.repeat(jnp.asarray(qpos, jnp.int32), G, axis=1)   # (B, C*G)
+    if impl == "ref" or (impl == "auto" and default_paged_impl() == "ref"):
+        out = kref.paged_prefill_ref(qt, k_pool, v_pool, table, qpe,
+                                     softcap=softcap)
+        out = jax.lax.optimization_barrier(out)
+    else:
+        cpb = pick_block_chunk(T, bs, head_dim=hd)
+        table, _ = _pad_view(table, None, k_pool, cpb)
+        qlast = jnp.max(qpe, axis=1).astype(jnp.int32)
+        out = paged_prefill_pallas(qt, k_pool, v_pool, table, qpe, qlast,
+                                   softcap=softcap, block_chunk=cpb,
+                                   interpret=(impl == "interpret"))
+    out = out.reshape(B, KV, C, G, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, C, H * hd)
 
 
 def emt_bitserial_matmul(xq, w, rho, *, device: DeviceModel, bits=7, seed=0,

@@ -6,6 +6,7 @@ The kernels sample RTN states from global element coordinates through
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -25,6 +26,46 @@ def emt_matmul_ref(x, w, rho, *, device: DeviceModel, seed=0, plane=0):
     return jnp.matmul(x, wn, preferred_element_type=jnp.float32).astype(jnp.float32)
 
 
+def _bmm_masked_attend(q, kv, vv, mask_rows, *, softcap=0.0):
+    """Batched-GEMM masked one-shot softmax attend.
+
+    q (B, KV, R, hd) query rows per kv head; kv/vv (B, L, KV, hd) logical
+    views; mask_rows (B, R, L) or (B, 1, L) additive fp32.  Returns
+    (B, KV, R, hd) fp32.
+
+    The contraction runs in `lax.dot_general` batched-matmul layout — K/V
+    transposed to (B*KV, L, hd) — which XLA:CPU lowers to its tuned batch-GEMM
+    (the `bkgh,bskh` einsum form lowers to a loop-of-dots and was measured
+    ~20% slower end-to-end on the decode rung; see BENCH_kernels.json).
+    Masking semantics match the pallas kernels: a row with no visible lane
+    yields exact zeros, masked lanes contribute exact zeros (m_safe keeps the
+    exp argument away from sentinel-minus-sentinel differences — exact in
+    strict fp, NaN-prone under XLA's reassociating fusions inside larger
+    jitted graphs).
+    """
+    B, KV, R, hd = q.shape
+    L = kv.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    k2 = kv.transpose(0, 2, 1, 3).reshape(B * KV, L, hd)
+    v2 = vv.transpose(0, 2, 1, 3).reshape(B * KV, L, hd)
+    q2 = q.reshape(B * KV, R, hd)
+    s = jax.lax.dot_general(q2, k2.astype(q2.dtype),
+                            (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    mask3 = jnp.broadcast_to(mask_rows, (B, mask_rows.shape[1], L))
+    s = s + jnp.repeat(mask3, KV, axis=0)             # (B*KV, R|1, L)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m_safe = jnp.where(m > NEG_INF / 2, m, 0.0)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_safe), 0.0)
+    acc = jax.lax.dot_general(p.astype(v2.dtype), v2,
+                              (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)
+    out = acc / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return out.reshape(B, KV, R, hd)
+
+
 def paged_attention_ref(q, k_pool, v_pool, table, mask, *, softcap=0.0):
     """Oracle for kernels.paged_attention.paged_attention_pallas.
 
@@ -38,31 +79,58 @@ def paged_attention_ref(q, k_pool, v_pool, table, mask, *, softcap=0.0):
     This rung is also the production decode path on CPU hosts (ops.py "auto"
     dispatch), so it is written for speed there: one fused gather of the
     *length-clamped* view (the serving engine clamps `table`/`mask` to the
-    live block-rounded bucket, not max_len) + one dense attend.  The
-    never-materialize-the-view property belongs to the pallas rung, where
-    the view would otherwise round-trip through HBM per layer per step.
+    live block-rounded bucket, not max_len) + one batched-GEMM attend
+    (_bmm_masked_attend).  The never-materialize-the-view property belongs
+    to the pallas rung, where the view would otherwise round-trip through
+    HBM per layer per step.
     """
     B, KV, G, hd = q.shape
     bs = k_pool.shape[1]
     T = table.shape[1]
     L = T * bs
-    scale = 1.0 / np.sqrt(hd)
     kv = k_pool[table].reshape(B, L, KV, hd)           # (B, T, bs, ...) flat
     vv = v_pool[table].reshape(B, L, KV, hd)
-    s = jnp.einsum("bkgh,bskh->bkgs", q, kv,
-                   preferred_element_type=jnp.float32) * scale
-    if softcap:
-        s = softcap * jnp.tanh(s / softcap)
-    s = s + mask[:, None, None, :]
-    m = jnp.max(s, axis=-1, keepdims=True)
-    # m_safe keeps the exp argument away from sentinel-minus-sentinel
-    # differences on all-masked rows (exact in strict fp, NaN-prone under
-    # XLA's reassociating fusions inside larger jitted graphs)
-    m_safe = jnp.where(m > NEG_INF / 2, m, 0.0)
-    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_safe), 0.0)
-    acc = jnp.einsum("bkgs,bskh->bkgh", p.astype(vv.dtype), vv,
-                     preferred_element_type=jnp.float32)
-    return acc / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return _bmm_masked_attend(q, kv, vv, mask[:, None, :], softcap=softcap)
+
+
+def paged_attention_decode_ref(q, k_pool, v_pool, table, mask, k_new, v_new,
+                               wblk, woff, wok, *, softcap=0.0):
+    """Oracle for kernels.paged_attention.paged_attention_decode_pallas.
+
+    Scatter-then-attend with the exact semantics of the legacy two-op decode
+    path (`attention._paged_write` + gather + attend): row b writes
+    k_new/v_new (B, KV, hd) at pool[wblk[b], woff[b]] iff wok[b], rows with
+    wok[b] == 0 are redirected out of bounds and dropped — so the returned
+    pools are *bit-identical* to the scatter path (same values, same dtype
+    cast), which the fused-write property harness enforces.  Also the CPU
+    production rung for one-launch decode (ops.py "auto").
+    """
+    blk = jnp.where(wok != 0, wblk, k_pool.shape[0])          # OOB: dropped
+    k_pool = k_pool.at[blk, woff].set(k_new.astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[blk, woff].set(v_new.astype(v_pool.dtype), mode="drop")
+    out = paged_attention_ref(q, k_pool, v_pool, table, mask, softcap=softcap)
+    return out, k_pool, v_pool
+
+
+def paged_prefill_ref(q, k_pool, v_pool, table, qpos, *, softcap=0.0):
+    """Oracle for kernels.paged_prefill.paged_prefill_pallas.
+
+    One-shot masked softmax over the gathered view with the causal mask
+    derived from `qpos` exactly as the kernel derives it in-register: kv
+    position p visible to query row r iff p <= qpos[b, r].  q (B, KV, R, hd)
+    with R = chunk_lanes * G; qpos (B, R) int32.  Returns (B, KV, R, hd)
+    fp32.  Also the CPU production rung for kernel-dispatched chunked
+    prefill.
+    """
+    B, KV, R, hd = q.shape
+    bs = k_pool.shape[1]
+    L = table.shape[1] * bs
+    kv = k_pool[table].reshape(B, L, KV, hd)
+    vv = v_pool[table].reshape(B, L, KV, hd)
+    mask_rows = jnp.where(
+        jnp.arange(L)[None, None, :] <= qpos[:, :, None], 0.0,
+        NEG_INF).astype(jnp.float32)                   # (B, R, L)
+    return _bmm_masked_attend(q, kv, vv, mask_rows, softcap=softcap)
 
 
 def emt_bitserial_ref(xq, w, rho, *, device: DeviceModel, bits=7, seed=0,

@@ -115,12 +115,17 @@ def _gqa_core(q, k, v, mask, cfg: ModelConfig, ctx: Ctx):
 
 
 def _fused_paged_ok(cfg: ModelConfig) -> bool:
-    """Whether the fused paged-attention kernel serves this config's decode.
+    """Whether the fused paged-attention kernels serve this config's paged
+    attention (decode and chunked prefill).
 
-    Graceful fallback to the materialized-gather path when the kernel is
-    switched off or the config uses M-RoPE (multimodal position streams are
-    not plumbed through the kernel's mask rows)."""
-    return bool(cfg.fused_paged_attn) and cfg.rope_type != "mrope"
+    The only fallback left is the explicit kill switch
+    (``cfg.fused_paged_attn=False``).  M-RoPE configs (qwen2_vl) used to fall
+    back too, but the kernel only ever consumes *post*-RoPE q/k and causal
+    mask rows over token indices — the multimodal position streams are
+    applied before the cache write, so the mask-row plumbing is
+    position-stream-agnostic and mrope decode runs the fused path like
+    everyone else (tests/test_paged_attention.py proves token identity)."""
+    return bool(cfg.fused_paged_attn)
 
 
 def _paged_impl(cfg: ModelConfig) -> str:
@@ -139,8 +144,6 @@ def paged_attn_plan(cfg: ModelConfig):
     """
     if not cfg.fused_paged_attn:
         res = "gather fallback (fused_paged_attn=False)"
-    elif cfg.rope_type == "mrope":
-        res = "gather fallback (mrope unsupported)"
     else:
         res = f"fused paged kernel [{_paged_impl(cfg)}]"
     rows = []
@@ -170,6 +173,26 @@ def _fused_paged_attend(q, k_pool, v_pool, table, mask_rows, cfg: ModelConfig):
     return out.reshape(B, 1, H * hd).astype(k_pool.dtype)
 
 
+def _fused_paged_decode(q, cache, table, mask_rows, k_new, v_new, wpos,
+                        active, cfg: ModelConfig):
+    """ONE kernel launch per decode layer: the step's new K/V rows are
+    scattered through the block table *inside* the kernel that reads them
+    (input_output_aliases pins the pool update in place), replacing the
+    scatter + gather/attend pair.  Same shape contract as
+    `_fused_paged_attend` plus the write operands; returns (y, new_cache).
+    """
+    from repro.kernels import ops as kops
+    B, Sq, H, hd = q.shape
+    KV = cache["k"].shape[2]
+    G = H // KV
+    out, k_pool, v_pool = kops.paged_attention_decode(
+        q[:, 0].reshape(B, KV, G, hd), cache["k"], cache["v"], table,
+        mask_rows, k_new, v_new, wpos, active,
+        softcap=float(cfg.attn_softcap or 0.0), impl=_paged_impl(cfg))
+    y = out.reshape(B, 1, H * hd).astype(k_pool.dtype)
+    return y, {"k": k_pool, "v": v_pool}
+
+
 def _visible_kv_elems(mask, kv_heads: int, head_dim: int):
     """K/V cache elements a decode step actually reads: mask-visible logical
     positions x kv heads x head_dim x 2 (K and V).  Masked positions (NEG_INF
@@ -180,6 +203,24 @@ def _visible_kv_elems(mask, kv_heads: int, head_dim: int):
     accounting (engine docstring: idle reads are real, booked as waste)."""
     vis = jnp.sum((mask > common.NEG_INF / 2).astype(jnp.float32))
     return vis * jnp.float32(kv_heads * head_dim * 2)
+
+
+def _visible_chunk_kv_elems(mask, valid, kv_heads: int, head_dim: int):
+    """Chunk-step K/V read billing: mask-visible positions of *real* lanes.
+
+    The chunk mask is (B, 1, C, L) with one row per query lane, and padding
+    lanes (j >= ntok[b]) carry a duplicate of the row's last real lane (qpos
+    is clamped so no softmax row is empty) — those lanes are compute filler,
+    not cache reads, and billing them over-counted every partially-filled
+    chunk by (C - ntok) x visible.  Weight by the (B, C) `valid` lane mask:
+    identical for the flash prefill kernel and the legacy gather path (both
+    see the same real lanes), and consistent with decode's per-row billing
+    (`_visible_kv_elems`): an idle decode-phase row still bills its one
+    clamped lane — idle reads are real, booked as waste (engine docstring).
+    """
+    vis = (mask > common.NEG_INF / 2).astype(jnp.float32)
+    vis = vis * valid[:, None, :, None].astype(jnp.float32)
+    return jnp.sum(vis) * jnp.float32(kv_heads * head_dim * 2)
 
 
 def paged_gather(pool, table, length: int):
@@ -237,10 +278,14 @@ def _chunk_attend(q, k, v, cache, mask, *, start, ntok, positions, active,
     ``start[b] .. start[b] + ntok[b] - 1``; the remaining lanes are padding
     (writes dropped, query outputs discarded by the caller).
 
-    * global / non-ring layers: write-then-gather — all chunk K/V land in the
-      cache first, then the row attends its logical view through the caller's
-      causal mask.  A decode row (ntok == 1) therefore sees *exactly* the
-      layout of the pure decode step.
+    * global / non-ring layers: write-then-attend — all chunk K/V land in
+      the cache first, then the row attends everything visible.  Paged
+      caches (default) dispatch the flash-style prefill kernel
+      (`kernels.ops.paged_prefill`): table-resolved pool tiles with
+      qpos-derived causality, no materialized view; the kill-switch fallback
+      (and contiguous caches) gather the logical view and attend through the
+      caller's causal mask.  A decode row (ntok == 1) sees *exactly* the
+      layout of the pure decode step either way.
     * ring layers: chunk writes can overwrite window positions an earlier
       in-chunk query still needs, so the row attends ``[pre-write ring view |
       fresh chunk K/V]`` with ring position masks; only the final ``win``
@@ -263,13 +308,25 @@ def _chunk_attend(q, k, v, cache, mask, *, start, ntok, positions, active,
         k_cache = _chunk_write(cache["k"], wpos, k, write_ok, page_table)
         v_cache = _chunk_write(cache["v"], wpos, v, write_ok, page_table)
         new_cache = {"k": k_cache, "v": v_cache}
+        # real lanes' mask-visible positions only (padding lanes carry
+        # clamped duplicate rows — compute filler, not cache reads)
+        kv_reads = _visible_chunk_kv_elems(mask, valid, KV, hd)
+        if page_table is not None and _fused_paged_ok(cfg):
+            # flash-style prefill kernel: the chunk's K/V is already in the
+            # pool (write-then-attend, same ordering as the gather path), the
+            # kernel walks table-resolved tiles with qpos-derived causality —
+            # the (B, page_len, KV, hd) view never materializes
+            from repro.kernels import ops as kops
+            y = kops.paged_prefill(q, k_cache, v_cache, page_table, qpos,
+                                   softcap=float(cfg.attn_softcap or 0.0),
+                                   impl=_paged_impl(cfg))
+            return y.astype(k_cache.dtype), new_cache, kv_reads
         if page_table is not None:
             k_att = paged_gather(k_cache, page_table, page_len)
             v_att = paged_gather(v_cache, page_table, page_len)
         else:
             k_att, v_att = k_cache, v_cache
         # caller's mask already covers the logical view at the clamped qpos
-        kv_reads = _visible_kv_elems(mask, KV, hd)
         return (_gqa_core(q, k_att, v_att, mask, cfg, ctx), new_cache,
                 kv_reads)
 
@@ -298,7 +355,7 @@ def _chunk_attend(q, k, v, cache, mask, *, start, ntok, positions, active,
     mask_cat = mask_cat[:, None]                                   # (B,1,C,·)
     k_att = jnp.concatenate([k_old, k.astype(k_old.dtype)], axis=1)
     v_att = jnp.concatenate([v_old, v.astype(v_old.dtype)], axis=1)
-    kv_reads = _visible_kv_elems(mask_cat, KV, hd)
+    kv_reads = _visible_chunk_kv_elems(mask_cat, valid, KV, hd)
     return _gqa_core(q, k_att, v_att, mask_cat, cfg, ctx), new_cache, kv_reads
 
 
@@ -381,11 +438,11 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             aux = add_aux(aux, a)
             return o, aux, new_cache
         elif page_table is not None:
-            # ---- decode, paged: write through the block table, then attend
-            # the pool *through* the table — fused kernel (default) reads one
-            # (block_size, hd) tile at a time inside the kernel; the fallback
-            # gathers the (B, page_len) logical view (already length-clamped
-            # by the engine to the live block-rounded bucket, not max_len) ---
+            # ---- decode, paged: fused kernel (default) writes the token's
+            # K/V through the block table AND walks the pool tiles inside one
+            # launch; the fallback scatters first, then gathers the
+            # (B, page_len) logical view (already length-clamped by the
+            # engine to the live block-rounded bucket, not max_len) ---------
             idx = jnp.asarray(cache_index)
             if idx.ndim == 0:                 # lockstep scalar index
                 idx = jnp.broadcast_to(idx, (B,))
@@ -393,9 +450,6 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             ring_paged = page_ring if page_ring is not None \
                 else bool(win) and L == win
             wpos = jnp.mod(idx, L) if ring_paged else idx
-            k_cache = _paged_write(cache["k"], page_table, wpos, k[:, 0], active)
-            v_cache = _paged_write(cache["v"], page_table, wpos, v[:, 0], active)
-            new_cache = {"k": k_cache, "v": v_cache}
             if ring_paged:
                 # same modular position arithmetic as the contiguous ring
                 k_pos = idx[:, None] - jnp.mod(
@@ -408,9 +462,16 @@ def self_attention(params, x, cfg: ModelConfig, *, positions, mask, ctx: Ctx,
             aux["kv_reads"] = aux["kv_reads"] + _visible_kv_elems(
                 mask_rows, KV, hd)
             if _fused_paged_ok(cfg):
-                fused_y = _fused_paged_attend(q, k_cache, v_cache, page_table,
-                                              mask_rows, cfg)
+                # one launch: in-kernel cache write + chunk-walk attend
+                fused_y, new_cache = _fused_paged_decode(
+                    q, cache, page_table, mask_rows, k[:, 0], v[:, 0],
+                    wpos, active, cfg)
             else:
+                k_cache = _paged_write(cache["k"], page_table, wpos,
+                                       k[:, 0], active)
+                v_cache = _paged_write(cache["v"], page_table, wpos,
+                                       v[:, 0], active)
+                new_cache = {"k": k_cache, "v": v_cache}
                 k = paged_gather(k_cache, page_table, L)
                 v = paged_gather(v_cache, page_table, L)
                 mask = jnp.broadcast_to(mask_rows[:, None, None, :],

@@ -316,10 +316,13 @@ def chunk_step(params, cache, tokens, start, ntok, cfg: ModelConfig, ctx: Ctx,
     qpos = start[:, None] + jnp.minimum(j, ntok[:, None] - 1)
     L = page_lens["global"] if page_lens else (_cache_len(cache) or 1)
     k_pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
-    # write-then-gather (non-ring layers): the view already holds the chunk's
-    # own K/V at their true positions, so the plain causal mask covers both
-    # the cached history and in-chunk attention; ring layers build their own
-    # [ring view | fresh chunk] masks (attention._chunk_attend)
+    # write-then-attend (non-ring layers): the chunk's own K/V lands in the
+    # pools at its true positions first, so plain causal masking covers both
+    # the cached history and in-chunk attention — via the chunked-prefill
+    # kernel (kernels.ops.paged_prefill, causality derived from qpos
+    # in-kernel) when fused, via gather + this materialized mask otherwise;
+    # ring layers build their own [ring view | fresh chunk] masks
+    # (attention._chunk_attend)
     masks = {"global": common.causal_mask(qpos, k_pos),
              "local": common.causal_mask(qpos, k_pos, cfg.sliding_window)}
 
@@ -359,7 +362,10 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,
     engine clamps it (and the `Tg` table width) each step to the block-rounded
     bucket of the furthest live write position instead of max_len — masks,
     gathers, and the fused kernel's chunk walk all scale with what is actually
-    resident (lm.clamped_lens).
+    resident (lm.clamped_lens).  On the fused path the step's cache write is
+    folded into the attention launch (kernels.ops.paged_attention_decode:
+    in-kernel scatter via input/output aliasing, inactive rows drop their
+    write) — one kernel per layer per step, no separate scatter op.
 
     `enc_lens` (B,) int masks enc-dec cross-attention to each row's real
     encoder positions — serving engines cache ck/cv at max_len (zero-padded

@@ -54,13 +54,20 @@ is free or bound to exactly one in-flight request:
   boundary, and everything is freed at retirement.  Admission is gated on the
   free-block budget as well as a free batch row, so an engine can hold many
   more rows than ``max_len``-sized KV regions — short requests no longer
-  strand ``max_len - len`` positions of capacity.  Decode attends each slot's
-  blocks *through* its table — by default inside the fused paged-attention
-  kernel (:mod:`repro.kernels.paged_attention`), which reads one block tile
-  at a time and never materializes the logical view; the gather fallback
-  (``cfg.fused_paged_attn=False`` / mrope) materializes a view clamped to the
-  block-rounded bucket of the furthest live position (``view_bucket``), not
-  ``max_len``.  Unallocated entries resolve to a dedicated always-zero block,
+  strand ``max_len - len`` positions of capacity.  Decode is ONE kernel
+  launch per layer by default: the fused paged-attention kernel
+  (:mod:`repro.kernels.paged_attention`) scatters the step's new K/V row
+  through the block table *inside* the kernel that streams the block tiles
+  (``input_output_aliases`` pins the pool update in place) — no separate
+  scatter op, no materialized view.  Chunked prefill likewise attends
+  table-resolved tiles in a flash-style kernel
+  (:mod:`repro.kernels.paged_prefill`) instead of gathering the view per
+  chunk.  The only fallback is the explicit kill switch
+  (``cfg.fused_paged_attn=False``), which scatters then materializes a view
+  clamped to the block-rounded bucket of the furthest live position
+  (``view_bucket``), not ``max_len``; M-RoPE configs run the fused path (the
+  kernels only see post-RoPE q/k and token-index mask rows).  Unallocated
+  entries resolve to a dedicated always-zero block,
   keeping paged decode token-identical to the contiguous cache at
   temperature 0.
 * **energy** — the paper's per-step scalar ``energy_pj`` aux is attributed per
@@ -451,8 +458,10 @@ class ServingEngine:
         self.peak_concurrent = 0     # high-water mark of active slots
         self._tables_dev = None      # (view_len, tables) on device (None = stale)
         self.view_len = 0            # last decode step's clamped logical view
-        # decode K/V cache elements actually read (mask-visible positions
-        # only — aux["kv_reads"]); padded/zero-block gathers are not billed
+        # decode + chunk K/V cache elements actually read (mask-visible
+        # positions of real lanes only — aux["kv_reads"]); padded/zero-block
+        # gathers and chunk padding lanes (clamped duplicate qpos rows) are
+        # not billed, identically on the kernel and legacy attend paths
         self.kv_reads_total = 0.0
         # chunked-prefill accounting: prompt tokens actually run through the
         # model vs served straight from the prefix cache (zero energy/reads)

@@ -212,8 +212,15 @@ def test_fused_plan_report():
                                   for _, r in plan)
     plan = paged_attn_plan(_harness_cfg("ideal", None))
     assert all("gather fallback" in r for _, r in plan)
+    # M-RoPE no longer falls back: the kernel consumes post-RoPE q/k and
+    # token-index mask rows, so position streams never reach it.  Zero
+    # fallback layers on every shipped config (ISSUE 6 satellite).
     mrope = get_config("qwen2-vl-72b", emt_mode="ideal", smoke=True)
-    assert all("mrope" in r for _, r in paged_attn_plan(mrope))
+    assert all("fused paged kernel" in r for _, r in paged_attn_plan(mrope))
+    from repro.configs import ARCHS
+    for name in ARCHS:
+        cfg = get_config(name, emt_mode="ideal", smoke=True)
+        assert not any("fallback" in r for _, r in paged_attn_plan(cfg)), name
 
 
 # ---------------------------------------------------------------------------
@@ -420,3 +427,201 @@ def test_kv_reads_contiguous_decode_matches_paged():
                                jnp.asarray([9, 3], jnp.int32), cfg, ctx)
     assert float(aux["kv_reads"]) == \
         (10 + 4) * cfg.num_kv_heads * cfg.head_dim * 2
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked-prefill kernel (kernels/paged_prefill.py)
+# ---------------------------------------------------------------------------
+def _prefill_lane_oracle(q, kp, vp, table, qpos, softcap=0.0):
+    """Per-lane dense oracle: each chunk lane is a decode query whose mask is
+    the causal row arange(L) <= qpos — the exact math the legacy
+    write-then-gather path ran through `_gqa_core`."""
+    B, C, H, hd = q.shape
+    KV = kp.shape[2]
+    G = H // KV
+    L = table.shape[1] * kp.shape[1]
+    outs = []
+    for c in range(C):
+        mask = jnp.where(jnp.arange(L)[None, :] <= qpos[:, c][:, None], 0.0,
+                         NEG_INF).astype(jnp.float32)
+        o = _dense_oracle(q[:, c].reshape(B, KV, G, hd), kp, vp, table, mask,
+                          softcap)
+        outs.append(o.reshape(B, H * hd))
+    return jnp.stack(outs, axis=1)
+
+
+def _prefill_case(rng, B, KV, G, hd, bs, T, C):
+    """Phase-mixed chunk: random per-row ntok in [1, C] (1 == decode-phase
+    row riding along), random starts landing mid-block (partial blocks)."""
+    NB = B * T + 1
+    H = KV * G
+    q = jnp.asarray(rng.normal(size=(B, C, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(NB + 1, bs, KV, hd)),
+                     jnp.float32).at[NB].set(0.0)
+    vp = jnp.asarray(rng.normal(size=(NB + 1, bs, KV, hd)),
+                     jnp.float32).at[NB].set(0.0)
+    table = jnp.asarray(rng.integers(0, NB, size=(B, T)), jnp.int32)
+    table = table.at[:, -1].set(NB)          # unallocated tail -> zero block
+    ntok = rng.integers(1, C + 1, size=B)
+    start = rng.integers(0, T * bs - C, size=B)
+    j = np.arange(C)[None, :]
+    qpos = jnp.asarray(start[:, None] + np.minimum(j, ntok[:, None] - 1),
+                       jnp.int32)
+    return q, kp, vp, table, qpos
+
+
+@pytest.mark.parametrize("bs,KV,G,C,softcap", [
+    (4, 2, 2, 5, 0.0),     # partial blocks: starts/qpos land mid-block
+    (8, 1, 3, 4, 30.0),    # softcap before the causal mask
+    (2, 2, 1, 6, 0.0),     # tiny blocks: chunk spans many blocks
+])
+def test_prefill_kernel_parity_sweep(bs, KV, G, C, softcap):
+    """interpret-mode prefill kernel vs jnp reference vs per-lane dense
+    oracle, over phase-mixed batches with mid-block starts."""
+    rng = np.random.default_rng(bs * 100 + KV * 10 + G + C)
+    T = 5                                     # non-pow2: wrapper pads
+    q, kp, vp, table, qpos = _prefill_case(rng, B=3, KV=KV, G=G, hd=16,
+                                           bs=bs, T=T, C=C)
+    y_ref = ops.paged_prefill(q, kp, vp, table, qpos, softcap=softcap,
+                              impl="ref")
+    y_int = ops.paged_prefill(q, kp, vp, table, qpos, softcap=softcap,
+                              impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               atol=2e-6)
+    y_d = _prefill_lane_oracle(q, kp, vp, table, qpos, softcap)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_d), atol=2e-6)
+
+
+def test_prefill_kernel_chunk_skip_boundary():
+    """Rows whose furthest visible position sits exactly at a block-chunk
+    span edge: the kernel's per-row chunk skip must include the boundary
+    chunk and exclude the ones past it (off-by-one hazard)."""
+    rng = np.random.default_rng(11)
+    B, KV, G, hd, bs, T, C = 3, 1, 2, 8, 4, 256, 2   # span = 512 positions
+    NB = 300
+    H = KV * G
+    q = jnp.asarray(rng.normal(size=(B, C, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(NB + 1, bs, KV, hd)),
+                     jnp.float32).at[NB].set(0.0)
+    vp = jnp.asarray(rng.normal(size=(NB + 1, bs, KV, hd)),
+                     jnp.float32).at[NB].set(0.0)
+    table = jnp.asarray(rng.integers(0, NB, size=(B, T)), jnp.int32)
+    span = ops.pick_block_chunk(T, bs, head_dim=hd) * bs
+    assert span < T * bs                      # multiple grid chunks
+    # qlast one-below / at / one-past the first chunk edge per row
+    qpos = jnp.asarray([[span - 2, span - 1],
+                        [span - 1, span],
+                        [span, span + 1]], jnp.int32)
+    y_ref = ops.paged_prefill(q, kp, vp, table, qpos, impl="ref")
+    y_int = ops.paged_prefill(q, kp, vp, table, qpos, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               atol=2e-6)
+
+
+def test_pick_block_chunk_occupancy():
+    """Narrow (low-occupancy) views run in one grid step; wide views cap at
+    the ~512-position VMEM-bounded chunk; always a power of two."""
+    assert ops.pick_block_chunk(0, 16) == 1
+    assert ops.pick_block_chunk(1, 16) == 1
+    assert ops.pick_block_chunk(2, 16) == 2         # whole view, one step
+    assert ops.pick_block_chunk(3, 16) == 4         # pow2 ceil of width
+    assert ops.pick_block_chunk(64, 16) == 32       # 512-position cap
+    assert ops.pick_block_chunk(256, 4) == 128
+    for w in (1, 2, 5, 17, 63, 200):
+        c = ops.pick_block_chunk(w, 8)
+        assert c & (c - 1) == 0                      # pow2
+
+
+# ---------------------------------------------------------------------------
+# fused in-kernel cache write: pool bit-identity with the scatter path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("emt,impl", [
+    ("ideal", "ref"), ("ideal", "interpret"), ("analog", "ref"),
+    ("analog", "interpret"),
+])
+@pytest.mark.parametrize("pattern", [("global",), ("local",)])
+def test_fused_write_pool_bit_identity(emt, impl, pattern):
+    """Decode with the fused in-kernel write must leave the K/V pools
+    BIT-identical to the scatter + gather fallback after every step — same
+    values, same dtype cast, same inactive-row drop — under ideal and analog
+    per-row DAC quant, and produce the same argmax token.
+
+    Single-layer stacks on purpose: the written K/V rows then derive from
+    identical inputs on both paths (embeddings), isolating the write
+    mechanism.  In deeper stacks attend outputs differ at ulp level (online
+    vs one-shot softmax), so later layers' *projected* K/V differs at ulp —
+    that path is covered by the token-identity harness above."""
+    cfg_f = _harness_cfg(emt, impl).replace(num_layers=1,
+                                            layer_pattern=pattern)
+    cfg_s = _harness_cfg(emt, None).replace(num_layers=1,
+                                            layer_pattern=pattern)
+    params = init_params(lm.specs(cfg_f), jax.random.PRNGKey(4))
+    B, max_len, bs, win = 2, 16, 4, 8
+    kv = PagedKV(B, max_len, bs, num_blocks=2 * (max_len // bs), ring_len=win,
+                 num_ring_blocks=2 * (win // bs))
+    assert kv.admit(0, 5, 8) and kv.admit(1, 2, 8)
+    starts = [5, 2]
+    for slot, s0 in enumerate(starts):
+        for p in range(s0 + 4):
+            kv.ensure(slot, p)
+    cache_f = lm.init_paged_cache(cfg_f, B, max_len, bs,
+                                  2 * (max_len // bs), 2 * (win // bs))
+    cache_s = jax.tree.map(jnp.copy, cache_f)
+    tg, tl = kv.gather_tables()
+    tables = {"global": jnp.asarray(tg), "local": jnp.asarray(tl)}
+    lens = lm.paged_lens(cfg_f, max_len)
+    ctx = Ctx(seed=jnp.uint32(0))
+    rng = np.random.default_rng(9)
+    active = jnp.asarray([True, True])
+    for t in range(4):
+        toks = jnp.asarray(rng.integers(0, cfg_f.vocab_size, B), jnp.int32)
+        idx = jnp.asarray([starts[0] + t, starts[1] + t], jnp.int32)
+        if t == 3:                      # freeze row 1: inactive rows must
+            active = jnp.asarray([True, False])       # not write (drop)
+        l_f, cache_f, _ = lm.decode_step(params, cache_f, toks, idx, cfg_f,
+                                         ctx, active=active,
+                                         page_tables=tables, page_lens=lens)
+        l_s, cache_s, _ = lm.decode_step(params, cache_s, toks, idx, cfg_s,
+                                         ctx, active=active,
+                                         page_tables=tables, page_lens=lens)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"pool diverged from scatter path at step {t}"),
+            cache_f, cache_s)
+        np.testing.assert_array_equal(
+            np.argmax(np.asarray(l_f), -1), np.argmax(np.asarray(l_s), -1),
+            err_msg=f"token diverged at step {t}")
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill kv-read billing (padding lanes must not bill)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused_impl", [None, "ref", "interpret"])
+def test_chunk_kv_reads_bill_valid_lanes_only(fused_impl):
+    """Chunk-step billing counts mask-visible positions of REAL lanes only:
+    sum over rows of sum_{i<ntok}(qpos_i + 1) x KV x hd x 2.  Padding lanes
+    (clamped duplicate qpos rows) are compute filler, not reads — and the
+    count is identical between the flash prefill kernel and the legacy
+    gather path."""
+    cfg, params = _kv_reads_setup(fused_impl)
+    B, C, max_len, bs = 2, 4, 16, 4
+    kv = PagedKV(B, max_len, bs, num_blocks=2 * (max_len // bs))
+    assert kv.admit(0, 4, 4) and kv.admit(1, 7, 4)
+    for p in range(4):
+        kv.ensure(0, p)
+    for p in range(7):
+        kv.ensure(1, p)
+    cache = lm.init_paged_cache(cfg, B, max_len, bs, 2 * (max_len // bs))
+    tg, tl = kv.gather_tables()
+    ctx = Ctx(seed=jnp.uint32(0))
+    toks = jnp.asarray(np.arange(B * C).reshape(B, C), jnp.int32)
+    start = jnp.asarray([0, 6], jnp.int32)
+    ntok = jnp.asarray([4, 1], jnp.int32)    # prefill row + decode-phase row
+    # row 0 lanes see 1+2+3+4 positions; row 1's single real lane sees 7;
+    # its 3 padding lanes (clamped to qpos=6) must NOT add 3 x 7
+    expect = (1 + 2 + 3 + 4 + 7) * cfg.num_kv_heads * cfg.head_dim * 2
+    _, _, aux = lm.chunk_step(
+        params, cache, toks, start, ntok, cfg, ctx,
+        page_tables={"global": jnp.asarray(tg), "local": jnp.asarray(tl)},
+        page_lens=lm.paged_lens(cfg, max_len))
+    assert float(aux["kv_reads"]) == expect, fused_impl
