@@ -29,12 +29,50 @@ REQUIRED = {
         "fused_paged",
         "mixed_placement",
         "shared_prefix",
+        "poisson_load",
     ],
     "BENCH_kernels.json": ["shape", "cases", "prefill_cases", "ratios"],
 }
 
 # loose-for-CI-noise regression bound on fused/gather_clamped at occ=100%
 FUSED_RATIO_BOUND = 1.25
+
+
+def check_poisson(path, poisson):
+    """Latency section (bench_latency.py): the percentile fields must exist
+    and the steady-state p99 TTFT / inter-token latency must be finite and
+    positive (raw magnitudes are machine-dependent and never gated).  The
+    energy-conservation invariant must hold including cancelled/timed-out
+    partials, and the overload sub-scenario must actually exercise
+    backpressure or deadlines (otherwise the front-end silently queued
+    unbounded)."""
+    import math
+
+    for field in ("ttft_ms", "inter_token_ms"):
+        stats = poisson.get(field)
+        if not isinstance(stats, dict):
+            raise SystemExit(f"{path}: poisson_load missing {field}")
+        for pct in ("p50", "p99"):
+            v = stats.get(pct)
+            if v is None or not math.isfinite(v) or v <= 0:
+                raise SystemExit(
+                    f"{path}: poisson_load {field}.{pct} must be finite "
+                    f"and positive, got {v!r}")
+    if not poisson.get("energy_conserved_with_partials", False):
+        raise SystemExit(f"{path}: poisson_load broke per-request + idle "
+                         f"== total energy conservation")
+    over = poisson.get("overload")
+    if over is not None:
+        shed = (over.get("rejected", 0)
+                + over.get("done_reasons", {}).get("timeout", 0)
+                + over.get("done_reasons", {}).get("cancelled", 0))
+        if shed <= 0:
+            raise SystemExit(
+                f"{path}: poisson_load overload shed no load — backpressure "
+                f"or deadline enforcement is broken")
+        if not over.get("energy_conserved_with_partials", False):
+            raise SystemExit(f"{path}: poisson_load overload broke energy "
+                             f"conservation with partials")
 
 
 def check(path):
@@ -48,6 +86,9 @@ def check(path):
     if shared is not None:
         if not shared.get("token_identity_paged_vs_contiguous", False):
             raise SystemExit(f"{path}: shared_prefix broke token identity")
+    poisson = report.get("poisson_load")
+    if poisson is not None:
+        check_poisson(path, poisson)
     if name == "BENCH_kernels.json":
         ratio = report["ratios"]["fused_vs_gather_clamped"]["occ100_max"]
         if ratio > FUSED_RATIO_BOUND:

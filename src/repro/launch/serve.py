@@ -38,6 +38,14 @@ Flags (new continuous-batching engine):
     --prefix-cache     refcounted prefix caching (needs --paged, an all-global
                        attention stack): shared prompt prefixes are served
                        from resident blocks and bill zero prefill energy
+    --rate R           streaming front-end mode: drive the engine through
+                       repro.serve.server.StreamingServer with open-loop
+                       Poisson arrivals at R req/s (replaces --stagger) and
+                       report p50/p99 TTFT + inter-token latency
+    --deadline-s T     per-request deadline in the streaming mode (expired
+                       requests retire with done_reason="timeout")
+    --max-pending N    bounded admission queue in the streaming mode
+                       (arrivals beyond it are rejected — backpressure)
 
 Reports decode tok/s and per-request EMT energy in uJ/token.  With --paged
 the startup banner prints which attention path each layer resolved to.
@@ -90,6 +98,33 @@ def print_plan(cfg):
             run.append((path, corner, mode))
 
 
+def serve_streaming(eng, reqs, *, rate, deadline_s, max_pending, seed=0):
+    """Drive `eng` through the async streaming front-end with open-loop
+    Poisson arrivals; returns (results, wall_s, rejected, ttft_s, itl_s)."""
+    from repro.serve.scheduler import RejectedError
+    from repro.serve.server import StreamingServer
+
+    rng = np.random.default_rng(seed)
+    handles, rejected = [], 0
+    with StreamingServer(eng, max_pending=max_pending) as srv:
+        t0 = time.monotonic()
+        at = 0.0
+        for r in reqs:
+            at += rng.exponential(1.0 / rate)
+            delay = t0 + at - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            try:
+                handles.append(srv.submit(r, deadline_s=deadline_s))
+            except RejectedError:
+                rejected += 1
+        results = [h.result(timeout=600) for h in handles]
+        wall = time.monotonic() - t0
+    ttft = [h.ttft_s for h in handles if h.ttft_s is not None]
+    itl = [d for h in handles for d in h.itl_s]
+    return results, wall, rejected, ttft, itl
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS), default="gemma3-1b")
@@ -139,6 +174,13 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="refcounted prefix caching over the paged pool "
                          "(requires --paged + all-global attention)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="streaming front-end: open-loop Poisson arrival "
+                         "rate in req/s (0 = synchronous --stagger driver)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline for --rate mode")
+    ap.add_argument("--max-pending", type=int, default=16,
+                    help="admission-queue bound for --rate mode")
     args = ap.parse_args()
     if args.placement and args.device:
         ap.error("--placement and --device are mutually exclusive "
@@ -181,9 +223,22 @@ def main():
                        seed=i)
             for i in range(n_req)]
 
-    t0 = time.time()
-    results = eng.serve(reqs, stagger=args.stagger)
-    dt = time.time() - t0
+    if args.rate > 0:
+        results, dt, rejected, ttft, itl = serve_streaming(
+            eng, reqs, rate=args.rate, deadline_s=args.deadline_s,
+            max_pending=args.max_pending, seed=args.seed)
+        p = lambda xs, q: np.percentile(np.asarray(xs) * 1e3, q)  # noqa: E731
+        if ttft:
+            print(f"streaming @ {args.rate:g} req/s: TTFT p50 "
+                  f"{p(ttft, 50):.1f} ms / p99 {p(ttft, 99):.1f} ms"
+                  + (f", inter-token p50 {p(itl, 50):.1f} ms / p99 "
+                     f"{p(itl, 99):.1f} ms" if itl else ""))
+        if rejected:
+            print(f"rejected at admission (queue full): {rejected}")
+    else:
+        t0 = time.time()
+        results = eng.serve(reqs, stagger=args.stagger)
+        dt = time.time() - t0
 
     tok_count = sum(len(r.tokens) for r in results)
     total_uj = sum(r.energy_pj for r in results) * 1e-6

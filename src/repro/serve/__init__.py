@@ -3,5 +3,6 @@ from repro.serve.engine import (ServingEngine, GenRequest, GenResult,
                                 make_serve_decode_step, make_paged_decode_step,
                                 serve_shardings, prefill_bucket)
 from repro.serve.kv_pool import BlockPool, PagedKV
-from repro.serve.scheduler import Scheduler, Slot
+from repro.serve.scheduler import RejectedError, Scheduler, Slot
 from repro.serve.sampling import sample_tokens
+from repro.serve.server import RequestHandle, StreamingServer

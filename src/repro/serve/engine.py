@@ -88,7 +88,7 @@ request — the property the alone-vs-staggered equivalence tests exercise.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -103,7 +103,12 @@ from repro.nn.param import param_shardings
 from repro.parallel.sharding import RULES, make_shard_fn, cache_shardings
 from repro.serve import sampling
 from repro.serve.kv_pool import PagedKV
-from repro.serve.scheduler import Scheduler, Slot
+from repro.serve.scheduler import RejectedError, Scheduler, Slot
+
+__all__ = ["ServingEngine", "GenRequest", "GenResult", "RejectedError",
+           "prefill_bucket", "view_bucket", "serve_shardings",
+           "make_prefill_step", "make_decode_step", "make_serve_decode_step",
+           "make_chunk_step", "make_paged_decode_step"]
 
 
 def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
@@ -331,7 +336,11 @@ class GenResult:
     energy_pj: float                 # total EMT energy billed to this request
     prefill_energy_pj: float         # ... of which prefill
     steps: int                       # decode steps the request participated in
-    done_reason: str                 # "eos" | "max_new" | "max_len"
+    # "eos" | "max_new" | "max_len" | "cancelled" | "timeout" — the last two
+    # come from ServingEngine.cancel(): the slot retired early with whatever
+    # partial tokens/energy it had accumulated (per-request + idle == total
+    # energy conservation holds for partials too)
+    done_reason: str
 
 
 def prefill_bucket(n: int, lo: int = 4) -> int:
@@ -362,7 +371,9 @@ class ServingEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  num_ring_blocks: Optional[int] = None, placement=None,
                  chunked_prefill: Optional[bool] = None,
-                 prefill_chunk: int = 16, prefix_cache: bool = False):
+                 prefill_chunk: int = 16, prefix_cache: bool = False,
+                 max_pending: Optional[int] = None,
+                 on_token: Optional[Callable[[int, int], None]] = None):
         if placement is not None:
             # heterogeneous device placement (EMTConfig or DevicePlacement):
             # overrides the config's EMT surface for this engine. Params must
@@ -424,7 +435,8 @@ class ServingEngine:
                 self._chunk = jax.jit(make_chunk_step(cfg, mesh, rules, lens),
                                       donate_argnums=(1,),
                                       static_argnames=("view_len",))
-            self.scheduler = Scheduler(batch_size, kv=self.kv)
+            self.scheduler = Scheduler(batch_size, kv=self.kv,
+                                       max_pending=max_pending)
         else:
             self.kv = None
             self._decode = jax.jit(make_serve_decode_step(cfg, mesh, rules),
@@ -434,7 +446,7 @@ class ServingEngine:
             if self.chunked:
                 self._chunk = jax.jit(make_chunk_step(cfg, mesh, rules),
                                       donate_argnums=(1,))
-            self.scheduler = Scheduler(batch_size)
+            self.scheduler = Scheduler(batch_size, max_pending=max_pending)
             self.cache = lm.init_cache(cfg, batch_size, max_len)
         # refcounted prefix caching: shared prompt-prefix blocks are reused
         # across requests (paged + chunked only; ring/recurrent/enc-dec state
@@ -449,6 +461,12 @@ class ServingEngine:
                                  "attention stack (sliding-window ring K/V is "
                                  "positional and cannot be shared)")
             self._pool_copy = jax.jit(make_pool_copy(cfg), donate_argnums=(0,))
+        # per-token streaming hook: called as on_token(rid, token) the moment
+        # a slot's new token is sampled (inside step()/_chunk_advance, before
+        # the request retires) — the async front-end points this at the
+        # per-request event queues.  Must be cheap and must not touch the
+        # engine (it runs mid-step).
+        self.on_token = on_token
         self.total_energy_pj = 0.0
         self.idle_energy_pj = 0.0    # decode energy of idle slots (waste)
         # per-corner energy totals (prefill + decode), keyed by the placement's
@@ -515,20 +533,56 @@ class ServingEngine:
         S = prefill_bucket(prompt_len)
         return prompt_len if S >= self.max_len else S
 
-    def submit(self, req: GenRequest) -> int:
-        """Enqueue a request; returns its rid. Admission happens in step()."""
+    def validate(self, req: GenRequest) -> np.ndarray:
+        """Hard request validation — every guard is a ValueError, never a bare
+        assert (asserts are stripped under ``python -O``; the ``kv.fits``
+        guard was made a hard error for exactly this reason and the rest must
+        match).  Returns the normalized (S,) int32 prompt.
+
+        Reads only static engine state (config, pool capacity), never the
+        mutable queue/slot tables — the streaming front-end calls it from the
+        submitting thread to reject bad requests synchronously before they
+        cross into the driver loop.
+        """
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
-        assert 1 <= len(prompt) <= self.max_len, \
-            f"prompt length {len(prompt)} vs max_len {self.max_len}"
-        assert req.max_new >= 1, f"max_new must be >= 1, got {req.max_new}"
+        if not 1 <= len(prompt) <= self.max_len:
+            raise ValueError(f"prompt length {len(prompt)} out of range "
+                             f"[1, max_len={self.max_len}]")
+        S = self._bucket_len(len(prompt))
+        if S > self.max_len:
+            # legacy bucketed prefill left-pads into prefill_bucket(L)
+            # positions (see the sizing note on prefill_bucket): a bucket
+            # wider than max_len would overrun the slot's cache region.
+            # _bucket_len clamps near-capacity buckets to the exact prompt
+            # length, so this is unreachable unless that clamp regresses —
+            # keep the hard guard so an overrun can never reach the cache.
+            raise ValueError(f"prompt bucket {S} overruns max_len "
+                             f"{self.max_len} (prompt length {len(prompt)})")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new}")
+        if not req.temperature >= 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {req.temperature}")
+        if not req.top_p >= 0:
+            raise ValueError(f"top_p must be >= 0, got {req.top_p}")
+        if req.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {req.top_k}")
         if self.paged:
             # FIFO admission head-blocks: a request that cannot fit even an
             # empty pool would deadlock the queue, so refuse it up front
-            # (hard error, not assert — the guard must survive python -O)
-            if not self.kv.fits(self._bucket_len(len(prompt)), req.max_new):
+            if not self.kv.fits(S, req.max_new):
                 raise ValueError(
                     f"request needs more KV blocks than the pool holds "
                     f"({self.kv.pool_g.num_blocks} x {self.block_size})")
+        return prompt
+
+    def submit(self, req: GenRequest) -> int:
+        """Enqueue a request; returns its rid. Admission happens in step().
+
+        Raises ValueError on an invalid request (see :meth:`validate`) and
+        :class:`RejectedError` when the engine was built with ``max_pending``
+        and the FIFO is full (backpressure, not an error in the request)."""
+        self.validate(req)
         return self.scheduler.submit(req)
 
     def step(self) -> List[GenResult]:
@@ -603,6 +657,7 @@ class ServingEngine:
             t = int(next_tok[i])
             s.last_token = t
             s.generated.append(t)
+            self._emit(s.rid, t)
             done = self._maybe_retire(i)
             if done is not None:
                 finished.append(done)
@@ -670,6 +725,7 @@ class ServingEngine:
                     t = int(next_tok[i])
                     s.last_token = t
                     s.generated.append(t)
+                    self._emit(s.rid, t)
             else:
                 s.energy_pj += share
                 s.steps += 1
@@ -677,6 +733,7 @@ class ServingEngine:
                 t = int(next_tok[i])
                 s.last_token = t
                 s.generated.append(t)
+                self._emit(s.rid, t)
             done = self._maybe_retire(i)
             if done is not None:
                 finished.append(done)
@@ -733,11 +790,65 @@ class ServingEngine:
                                             jnp.asarray(empty_l),
                                             jnp.int32(0))
 
-    def drain(self) -> List[GenResult]:
-        """Run step() until queue and slots are empty."""
+    def _emit(self, rid: int, token: int) -> None:
+        if self.on_token is not None:
+            self.on_token(rid, token)
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> Optional[GenResult]:
+        """Cancel request `rid` wherever it is: still queued (removed, empty
+        result) or bound to a slot (retired immediately with its partial
+        tokens).  The slot's paged blocks are freed through the same
+        refcount/zero-on-retire hygiene as a natural retirement — shared
+        prefix-cache blocks only lose one reference and stay hit-able — and
+        the energy already billed to the request rides out on the result, so
+        per-request + idle == total conservation holds with cancelled
+        partials.  `reason` becomes ``done_reason`` ("cancelled"/"timeout").
+        Returns None when `rid` is unknown or already finished."""
+        if self.scheduler.remove_pending(rid) is not None:
+            return GenResult(rid=rid, tokens=np.zeros(0, np.int32),
+                             energy_pj=0.0, prefill_energy_pj=0.0, steps=0,
+                             done_reason=reason)
+        slot_id = self.scheduler.slot_of(rid)
+        if slot_id is None:
+            return None
+        return self._retire(slot_id, reason)
+
+    def drain(self, stall_limit: int = 8) -> List[GenResult]:
+        """Run step() until queue and slots are empty.
+
+        Forward-progress guard: an active slot advances its position every
+        step (prefill chunk or decode token), so a step that changes nothing
+        — no admission, no position advance, no retirement, queue length
+        unchanged — means the engine can never retire anything again (e.g. a
+        pending request whose block budget is held by a leaked owner).
+        `stall_limit` identical steps raise RuntimeError with the stuck
+        state instead of spinning forever."""
         out = []
+        stalled, last = 0, None
         while self.scheduler.busy:
             out.extend(self.step())
+            snap = (self.scheduler.pending, len(out),
+                    tuple((i, s.pos) for i, s in
+                          self.scheduler.active_slots()))
+            if snap == last:
+                stalled += 1
+                if stalled >= stall_limit:
+                    slots = [f"slot {i}: rid={s.rid} pos={s.pos} "
+                             f"prefilling={s.prefilling} "
+                             f"generated={len(s.generated)}"
+                             for i, s in self.scheduler.active_slots()]
+                    pool = ""
+                    if self.paged:
+                        pool = (f"; pool free={self.kv.pool_g.num_free}"
+                                f"/{self.kv.pool_g.num_blocks} blocks")
+                    raise RuntimeError(
+                        f"drain() made no progress for {stalled} steps: "
+                        f"{self.scheduler.pending} pending, "
+                        f"{self.scheduler.num_active} active "
+                        f"[{'; '.join(slots) or 'none'}]{pool}")
+            else:
+                stalled = 0
+            last = snap
         return out
 
     # -- batch-mode wrapper --------------------------------------------------
@@ -840,6 +951,7 @@ class ServingEngine:
             rid=rid, req=req, pos=S, last_token=tok0, generated=[tok0],
             prefill_energy_pj=prefill_e,
             enc_len=S if self.cfg.is_encdec else 0))
+        self._emit(rid, tok0)
 
     def _maybe_retire(self, slot_id: int) -> Optional[GenResult]:
         s = self.scheduler.slots[slot_id]
@@ -853,6 +965,13 @@ class ServingEngine:
             reason = "max_len"           # cache exhausted: truncate
         else:
             return None
+        return self._retire(slot_id, reason)
+
+    def _retire(self, slot_id: int, reason: str) -> GenResult:
+        """Release slot `slot_id` with ``done_reason=reason``: free its paged
+        blocks (refcount-aware) or contiguous region, zero whatever became
+        blank, and return the request's result — shared by natural
+        retirement (_maybe_retire) and cancellation/timeout (cancel())."""
         slot = self.scheduler.retire(slot_id)
         # zero the retiring request's cache before its region/blocks can be
         # backfilled — stale K/V must never be gatherable by a later request

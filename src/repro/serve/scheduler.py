@@ -24,6 +24,14 @@ from typing import List, Optional
 from repro.serve.kv_pool import PagedKV
 
 
+class RejectedError(RuntimeError):
+    """Admission refused under backpressure: the bounded pending queue is
+    full.  Raised by :meth:`Scheduler.submit` (and surfaced through
+    ``ServingEngine.submit`` / the streaming server) instead of letting the
+    FIFO grow without bound while the block pool or batch is saturated — the
+    caller sheds load or retries, the engine never queues unservable work."""
+
+
 @dataclasses.dataclass
 class Slot:
     """One in-flight request bound to a batch row."""
@@ -56,15 +64,21 @@ class Slot:
 class Scheduler:
     """FIFO admission queue + slot table (+ optional paged-KV block tables)."""
 
-    def __init__(self, batch_size: int, kv: Optional[PagedKV] = None):
+    def __init__(self, batch_size: int, kv: Optional[PagedKV] = None,
+                 max_pending: Optional[int] = None):
         self.batch_size = batch_size
         self.kv = kv
+        self.max_pending = max_pending       # None = unbounded FIFO
         self.queue: deque = deque()          # (rid, req) awaiting a slot
         self.slots: List[Optional[Slot]] = [None] * batch_size
         self._next_rid = 0
 
     # -- queue ---------------------------------------------------------------
     def submit(self, req) -> int:
+        if self.max_pending is not None and len(self.queue) >= self.max_pending:
+            raise RejectedError(
+                f"pending queue full ({len(self.queue)} >= "
+                f"max_pending={self.max_pending}): shed load or retry")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append((rid, req))
@@ -79,6 +93,15 @@ class Scheduler:
 
     def pop_pending(self):
         return self.queue.popleft()
+
+    def remove_pending(self, rid: int):
+        """Pull a not-yet-admitted request out of the FIFO (cancellation).
+        Returns its GenRequest, or None if `rid` is not queued."""
+        for i, (qrid, req) in enumerate(self.queue):
+            if qrid == rid:
+                del self.queue[i]
+                return req
+        return None
 
     # -- slots ---------------------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -107,6 +130,13 @@ class Scheduler:
 
     def active_slots(self):
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def slot_of(self, rid: int) -> Optional[int]:
+        """Slot id currently bound to request `rid`, or None."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                return i
+        return None
 
     @property
     def num_active(self) -> int:

@@ -1,0 +1,213 @@
+"""Cancellation on the paged + prefix-cached engine: block hygiene + energy.
+
+Satellite harness for the streaming front-end PR: ``ServingEngine.cancel``
+retires a slot early through exactly the same refcount/zero-on-retire path
+as a natural retirement, so the properties the pool tests pin down must
+survive cancellation too:
+
+* **refcount conservation** — ``BlockPool.check()`` passes after cancelling
+  mid-prefill and mid-decode: every block blank xor cached xor active, no
+  leaks, reservations backed.
+* **zero-on-retire** — with prefix caching off, a cancelled request's blocks
+  are zeroed before they can be backfilled: stale K/V from an aborted
+  request must never be gatherable.
+* **prefix-cache survival** — cancelling a request that shares cached prefix
+  blocks drops one reference; the cached chain stays resident and hit-able,
+  and a later request still admits against it for free.
+* **energy conservation with partials** — cancelled results keep the energy
+  already billed; per-request (incl. partials) + idle == engine total.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.nn.param import init_params
+from repro.serve.engine import ServingEngine, GenRequest
+
+BLOCK = 4
+
+
+def _cfg():
+    # all-global attention (prefix caching requires it), analog so cancelled
+    # partials carry energy > 0; "ref" paged attention off the kernel path
+    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
+    return cfg.replace(dtype=jnp.float32, num_layers=2,
+                       layer_pattern=("attn",), sliding_window=0,
+                       paged_attn_impl="ref")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+
+    def engine(prefix_cache):
+        return ServingEngine(cfg, params, batch_size=2, max_len=32, seed=7,
+                             fresh_noise=False, paged=True, block_size=BLOCK,
+                             prefill_chunk=8, prefix_cache=prefix_cache)
+
+    # per-instance jit closures: share one engine per variant across tests
+    return cfg, {False: engine(False), True: engine(True)}
+
+
+def _reset(eng):
+    assert not eng.scheduler.busy, "previous test left the engine busy"
+    eng.total_energy_pj = 0.0
+    eng.idle_energy_pj = 0.0
+    return eng
+
+
+def _mk(cfg, rng, n, **kw):
+    return GenRequest(prompt=rng.integers(0, cfg.vocab_size, n)
+                      .astype(np.int32), **kw)
+
+
+def _step_until(eng, results, pred, limit=64):
+    for _ in range(limit):
+        if pred():
+            return
+        results += eng.step()
+    raise AssertionError("predicate never satisfied")
+
+
+def _assert_all_blocks_zero(eng):
+    for name, blk in eng.cache.items():
+        for key, arr in blk.items():
+            assert float(jnp.abs(arr).max()) == 0.0, \
+                f"stale data left in {name}/{key} after cancel"
+
+
+def test_cancel_mid_prefill(setup):
+    """Cancel while the prompt is still streaming in: no tokens yet, but the
+    chunk energy already spent is billed, the blocks go back, and nothing
+    stale survives in the pool."""
+    cfg, engines = setup
+    eng = _reset(engines[False])
+    rng = np.random.default_rng(0)
+    free0 = eng.kv.pool_g.num_free
+
+    rid = eng.submit(_mk(cfg, rng, 24, max_new=8, seed=1))  # 3 chunks of 8
+    results = []
+    results += eng.step()                                   # chunk 1 of 3
+    sid = eng.scheduler.slot_of(rid)
+    assert sid is not None and eng.scheduler.slots[sid].prefilling
+    assert eng.kv.pool_g.num_free < free0
+
+    res = eng.cancel(rid)
+    assert res.done_reason == "cancelled"
+    assert len(res.tokens) == 0, "mid-prefill cancel has no sampled tokens"
+    assert res.energy_pj > 0, "partial prefill energy must be billed"
+    results.append(res)
+
+    eng.kv.check()
+    assert eng.kv.pool_g.num_free == free0, "cancel leaked blocks"
+    _assert_all_blocks_zero(eng)
+    total = sum(r.energy_pj for r in results) + eng.idle_energy_pj
+    np.testing.assert_allclose(total, eng.total_energy_pj, rtol=1e-6)
+
+
+def test_cancel_mid_decode_with_cotenant(setup):
+    """Cancel one of two co-tenants mid-decode: the partial keeps its tokens
+    and energy, the survivor is untouched, freed blocks are zeroed before a
+    backfilled request can gather them, and conservation holds."""
+    cfg, engines = setup
+    eng = _reset(engines[False])
+    rng = np.random.default_rng(1)
+
+    rid0 = eng.submit(_mk(cfg, rng, 10, max_new=20, seed=1))
+    rid1 = eng.submit(_mk(cfg, rng, 6, max_new=6, seed=2))
+    results = []
+    _step_until(eng, results, lambda: any(
+        s.rid == rid0 and len(s.generated) >= 3
+        for _, s in eng.scheduler.active_slots()))
+    sid = eng.scheduler.slot_of(rid0)
+    n_at_cancel = len(eng.scheduler.slots[sid].generated)
+
+    res0 = eng.cancel(rid0)
+    assert res0.done_reason == "cancelled"
+    assert len(res0.tokens) == n_at_cancel >= 3
+    assert res0.energy_pj > res0.prefill_energy_pj > 0
+    eng.kv.check()
+
+    # backfill into the freed blocks, then finish everything
+    rid2 = eng.submit(_mk(cfg, rng, 8, max_new=4, seed=3))
+    results += [res0] + eng.drain()
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[rid1].done_reason == "max_new"
+    assert len(by_rid[rid1].tokens) == 6, "cancel disturbed the co-tenant"
+    assert by_rid[rid2].done_reason == "max_new"
+
+    eng.kv.check()
+    _assert_all_blocks_zero(eng)
+    total = sum(r.energy_pj for r in results) + eng.idle_energy_pj
+    np.testing.assert_allclose(total, eng.total_energy_pj, rtol=1e-6)
+
+
+def test_cancel_keeps_cached_prefix_hitable(setup):
+    """A cancelled request only drops its own reference on shared prefix
+    blocks: the cached chain survives and a later request with the same
+    prefix still admits against it (pool hits, zero incremental prefill)."""
+    cfg, engines = setup
+    eng = _reset(engines[True])
+    rng = np.random.default_rng(2)
+    head = rng.integers(0, cfg.vocab_size, 2 * BLOCK).astype(np.int32)
+
+    def with_head(tail_len, seed):
+        tail = rng.integers(0, cfg.vocab_size, tail_len).astype(np.int32)
+        return GenRequest(prompt=np.concatenate([head, tail]), max_new=4,
+                          seed=seed)
+
+    # A registers the head chain, retires, blocks park cached-free
+    eng.submit(with_head(4, seed=1))
+    results = eng.drain()
+    assert eng.kv.pool_g.num_cached > 0
+
+    # B admits against the cached head, then is cancelled mid-decode
+    hits0 = eng.kv.pool_g.hits
+    cached_toks0 = eng.cached_prefix_tokens
+    ridb = eng.submit(with_head(3, seed=2))
+    _step_until(eng, results, lambda: any(
+        s.rid == ridb and len(s.generated) >= 1
+        for _, s in eng.scheduler.active_slots()))
+    assert eng.kv.pool_g.hits > hits0, "B never hit the cached prefix"
+    assert eng.cached_prefix_tokens > cached_toks0
+    resb = eng.cancel(ridb)
+    assert resb.done_reason == "cancelled" and len(resb.tokens) >= 1
+    results.append(resb)
+    eng.kv.check()
+    assert eng.kv.pool_g.num_cached > 0, \
+        "cancel evicted the shared prefix chain"
+
+    # C still hits the same chain after the cancel
+    hits1 = eng.kv.pool_g.hits
+    cached_toks1 = eng.cached_prefix_tokens
+    eng.submit(with_head(5, seed=3))
+    results += eng.drain()
+    assert eng.kv.pool_g.hits > hits1, "cancel broke prefix-cache hits"
+    assert eng.cached_prefix_tokens > cached_toks1
+
+    eng.kv.check()
+    total = sum(r.energy_pj for r in results) + eng.idle_energy_pj
+    np.testing.assert_allclose(total, eng.total_energy_pj, rtol=1e-6)
+
+
+def test_cancel_timeout_reason_passthrough(setup):
+    """cancel(reason="timeout") is the deadline path: same hygiene, distinct
+    done_reason so clients can tell shed load from user cancellation."""
+    cfg, engines = setup
+    eng = _reset(engines[False])
+    rng = np.random.default_rng(3)
+    rid = eng.submit(_mk(cfg, rng, 6, max_new=16, seed=1))
+    results = []
+    _step_until(eng, results, lambda: any(
+        s.rid == rid and len(s.generated) >= 1
+        for _, s in eng.scheduler.active_slots()))
+    res = eng.cancel(rid, reason="timeout")
+    assert res.done_reason == "timeout" and len(res.tokens) >= 1
+    eng.kv.check()
+    _assert_all_blocks_zero(eng)
+    total = sum(r.energy_pj for r in results + [res]) + eng.idle_energy_pj
+    np.testing.assert_allclose(total, eng.total_energy_pj, rtol=1e-6)

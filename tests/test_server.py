@@ -1,0 +1,297 @@
+"""Streaming serving front-end: admission validation, token streaming,
+cancellation/timeout, backpressure, and the drain() forward-progress guard.
+
+Two layers of coverage:
+
+* **engine-level, deterministic** — the ``on_token`` hook fires at sample
+  time (a co-tenant's first token is observable strictly before an earlier
+  request retires), ``cancel()`` works from queue and slot, ``validate()``
+  raises hard ``ValueError``s (never bare asserts — they vanish under
+  ``python -O``), and a stuck engine fails fast out of ``drain()`` instead
+  of spinning.
+* **server-level, threaded** — :class:`repro.serve.server.StreamingServer`
+  round-trips: streamed tokens equal the final result, first tokens arrive
+  while co-tenants are still in flight, deadline timeouts and bounded-queue
+  rejections surface as ``done_reason="timeout"`` / ``RejectedError``, and
+  per-request + idle == total energy conservation holds with partials.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.nn.param import init_params
+from repro.serve.engine import ServingEngine, GenRequest
+from repro.serve.scheduler import RejectedError
+from repro.serve.server import StreamingServer
+
+
+def _cfg(num_layers=2):
+    # all-global attention keeps the global block pool the admission gate
+    # (the stall test leaks from it) and the stack small; "ref" paged attn
+    # keeps the CPU runner off the interpret-mode kernel path
+    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
+    return cfg.replace(dtype=jnp.float32, num_layers=num_layers,
+                       layer_pattern=("attn",), sliding_window=0,
+                       paged_attn_impl="ref")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    # one shared paged engine: jitted closures are per-instance, so reusing
+    # it keeps this module off the compile path (tests drain it back to idle)
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=32, seed=7,
+                        fresh_noise=False, paged=True, block_size=8)
+    return cfg, params, eng
+
+
+def _reset(eng):
+    assert not eng.scheduler.busy, "previous test left the engine busy"
+    eng.total_energy_pj = 0.0
+    eng.idle_energy_pj = 0.0
+    eng.on_token = None
+    return eng
+
+
+def _mk(cfg, rng, n, **kw):
+    return GenRequest(prompt=rng.integers(0, cfg.vocab_size, n)
+                      .astype(np.int32), **kw)
+
+
+# -- validation (satellite: hard errors, not asserts) -------------------------
+
+def test_validate_raises_valueerror_not_assert(setup):
+    cfg, params, eng = setup
+    _reset(eng)
+    rng = np.random.default_rng(0)
+    ok = _mk(cfg, rng, 6, max_new=4)
+    bad = [
+        GenRequest(prompt=np.zeros(0, np.int32)),                  # empty
+        _mk(cfg, rng, eng.max_len + 1),                            # too long
+        GenRequest(prompt=ok.prompt, max_new=0),
+        GenRequest(prompt=ok.prompt, temperature=-0.5),
+        GenRequest(prompt=ok.prompt, top_p=-0.1),
+        GenRequest(prompt=ok.prompt, top_k=-1),
+    ]
+    for req in bad:
+        with pytest.raises(ValueError):
+            eng.submit(req)
+    assert eng.scheduler.pending == 0, "rejected request reached the queue"
+    # a request that cannot fit even an empty pool is refused up front
+    # (FIFO admission would otherwise head-block forever)
+    tiny = ServingEngine(cfg, params, batch_size=1, max_len=32, seed=7,
+                         fresh_noise=False, paged=True, block_size=8,
+                         num_blocks=2)
+    with pytest.raises(ValueError):
+        tiny.validate(_mk(cfg, rng, 8, max_new=24))
+
+
+def test_engine_fifo_backpressure(setup):
+    cfg, params, eng = setup
+    rng = np.random.default_rng(1)
+    bounded = ServingEngine(cfg, params, batch_size=1, max_len=32, seed=7,
+                            fresh_noise=False, paged=True, block_size=8,
+                            max_pending=1)
+    bounded.submit(_mk(cfg, rng, 4, max_new=2))
+    with pytest.raises(RejectedError):
+        bounded.submit(_mk(cfg, rng, 4, max_new=2))
+
+
+# -- legacy bucketed prefill sizing (enc-dec regression) ----------------------
+
+def test_legacy_bucket_clamp_encdec():
+    """Enc-dec (legacy one-shot prefill) near capacity: a prompt whose pow2
+    bucket exceeds ``max_len`` must prefill at *exact* length — bit-identical
+    to the canonical unpadded prefill+decode path, never a cache overrun —
+    and a prompt longer than ``max_len`` is a ``ValueError`` at submit."""
+    from repro.models.context import Ctx
+    from repro.serve.engine import prefill_bucket
+
+    cfg = get_config("seamless-m4t-medium", emt_mode="analog", smoke=True)
+    cfg = cfg.replace(dtype=jnp.float32)
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 13).astype(np.int32)
+    max_len, max_new = 14, 2
+    assert prefill_bucket(len(prompt)) > max_len   # the clamp must engage
+
+    # canonical reference at exact length: no pow2 left-padding, so real
+    # token positions start at 0 — the layout the clamped engine must match
+    batch = {"tokens": jnp.asarray(prompt[None, :]),
+             "enc_embeds": jnp.zeros((1, 13, cfg.d_model), jnp.float32)}
+    ctx = Ctx(seed=jnp.uint32(3))
+    cache, logits, _ = lm.prefill(params, batch, cfg, ctx,
+                                  lm.init_cache(cfg, 1, max_len))
+    want, pos = [int(jnp.argmax(logits[0]))], 13
+    for _ in range(max_new - 1):
+        logits, cache, _ = lm.decode_step(
+            params, cache, jnp.asarray([want[-1]], jnp.int32), pos, cfg, ctx)
+        want.append(int(jnp.argmax(logits[0])))
+        pos += 1
+
+    eng = ServingEngine(cfg, params, batch_size=1, max_len=max_len,
+                        seed=3, fresh_noise=False)
+    assert not eng.chunked, "enc-dec must take the legacy prefill path"
+    assert eng._bucket_len(13) == 13               # clamped to exact length
+    eng.submit(GenRequest(prompt=prompt, max_new=max_new))
+    (res,) = eng.drain()
+    np.testing.assert_array_equal(res.tokens, np.asarray(want, np.int32))
+    with pytest.raises(ValueError):
+        eng.submit(_mk(cfg, rng, 15, max_new=1))   # longer than max_len
+
+
+# -- streaming (engine-level, deterministic) ----------------------------------
+
+def test_on_token_streams_before_cotenant_retires(setup):
+    """The acceptance property, without threads: a later request's first
+    token is emitted via ``on_token`` strictly before the first request
+    retires, and the streamed sequence equals each final result exactly."""
+    cfg, params, eng = setup
+    _reset(eng)
+    rng = np.random.default_rng(3)
+    emitted = {}                       # rid -> [(step, token), ...]
+    eng.on_token = lambda rid, tok: emitted.setdefault(rid, []).append(
+        (eng._steps, tok))
+
+    rid0 = eng.submit(_mk(cfg, rng, 6, max_new=10, seed=1))
+    rid1 = eng.submit(_mk(cfg, rng, 4, max_new=6, seed=2))
+    results = {}
+    while eng.scheduler.busy:
+        for res in eng.step():
+            results[res.rid] = (res, eng._steps)
+    eng.on_token = None
+
+    first_tok_step_r1 = emitted[rid1][0][0]
+    retire_step_r0 = results[rid0][1]
+    assert first_tok_step_r1 < retire_step_r0, \
+        "co-tenant's first token must stream before the earlier request " \
+        f"retires (r1 first @ step {first_tok_step_r1}, " \
+        f"r0 retired @ step {retire_step_r0})"
+    for rid in (rid0, rid1):
+        np.testing.assert_array_equal(
+            np.asarray([t for _, t in emitted[rid]], np.int32),
+            results[rid][0].tokens,
+            err_msg=f"streamed tokens diverge from final result (rid {rid})")
+
+
+def test_engine_cancel_queued_and_mid_flight(setup):
+    cfg, params, eng = setup
+    _reset(eng)
+    rng = np.random.default_rng(4)
+    rid0 = eng.submit(_mk(cfg, rng, 6, max_new=16, seed=1))
+    rid1 = eng.submit(_mk(cfg, rng, 6, max_new=4, seed=2))
+    rid2 = eng.submit(_mk(cfg, rng, 6, max_new=4, seed=3))   # queued (batch 2)
+
+    # queued: removed without ever occupying a slot
+    res2 = eng.cancel(rid2)
+    assert res2.done_reason == "cancelled" and len(res2.tokens) == 0
+    assert res2.energy_pj == 0.0 and res2.steps == 0
+
+    results = [res2]
+    while eng.scheduler.slot_of(rid0) is None or not any(
+            s.generated for i, s in eng.scheduler.active_slots()
+            if s.rid == rid0):
+        results += eng.step()
+    sid = eng.scheduler.slot_of(rid0)
+    n_at_cancel = len(eng.scheduler.slots[sid].generated)
+    res0 = eng.cancel(rid0)                                  # mid-decode
+    assert res0.done_reason == "cancelled"
+    assert len(res0.tokens) == n_at_cancel > 0
+    assert res0.energy_pj > 0, "partial energy must ride out on the result"
+    assert eng.cancel(rid0) is None, "double-cancel must be a no-op"
+    results += [res0] + eng.drain()
+
+    assert {r.rid for r in results} == {rid0, rid1, rid2}
+    eng.kv.check()
+    total = sum(r.energy_pj for r in results) + eng.idle_energy_pj
+    np.testing.assert_allclose(total, eng.total_energy_pj, rtol=1e-6)
+
+
+# -- drain() forward-progress guard -------------------------------------------
+
+def test_drain_raises_on_stuck_engine(setup):
+    """A pending request that can never be admitted (its block budget is held
+    by a leaked owner) must fail drain() with the stuck state, not spin."""
+    cfg, params, _ = setup
+    eng = ServingEngine(cfg, params, batch_size=1, max_len=32, seed=7,
+                        fresh_noise=False, paged=True, block_size=8,
+                        num_blocks=4)
+    rng = np.random.default_rng(5)
+    leaked = eng.kv.pool_g.alloc(owner=999, blocks=3)
+    assert leaked is not None
+    eng.submit(_mk(cfg, rng, 8, max_new=16))     # fits the pool, not the rest
+    with pytest.raises(RuntimeError, match="no progress"):
+        eng.drain(stall_limit=4)
+
+
+# -- server-level (threaded) --------------------------------------------------
+
+def test_server_streams_cotenants_and_conserves_energy(setup):
+    cfg, params, eng = setup
+    _reset(eng)
+    rng = np.random.default_rng(6)
+    with StreamingServer(eng, max_pending=4) as srv:
+        h0 = srv.submit(_mk(cfg, rng, 8, max_new=12, seed=1))
+        h1 = srv.submit(_mk(cfg, rng, 5, max_new=8, seed=2))
+        t1 = h1.next_token(timeout=120)
+        assert t1 is not None
+        assert not h0.done, \
+            "h1's first token must stream while h0 is still in flight"
+        streamed1 = [t1] + list(h1.tokens(timeout=120))
+        r0, r1 = h0.result(timeout=120), h1.result(timeout=120)
+    assert r0.done_reason == "max_new" and r1.done_reason == "max_new"
+    np.testing.assert_array_equal(np.asarray(streamed1, np.int32), r1.tokens)
+    assert h0.ttft_s is not None and h0.ttft_s > 0
+    assert len(h0.itl_s) == len(r0.tokens) - 1
+    assert all(d >= 0 for d in h0.itl_s)
+    assert srv.stats["completed"] == 2 and srv.stats["submitted"] == 2
+    total = r0.energy_pj + r1.energy_pj + eng.idle_energy_pj
+    np.testing.assert_allclose(total, eng.total_energy_pj, rtol=1e-6)
+
+
+def test_server_cancel_timeout_and_backpressure(setup):
+    cfg, params, eng = setup
+    _reset(eng)
+    rng = np.random.default_rng(7)
+    with StreamingServer(eng, max_pending=1) as srv:
+        # cancel mid-stream: partial result, energy still billed
+        hc = srv.submit(_mk(cfg, rng, 6, max_new=24, seed=1))
+        got = []
+        for tok in hc.tokens(timeout=120):
+            got.append(tok)
+            if len(got) == 2:
+                hc.cancel()
+        rc = hc.result(timeout=120)
+        assert rc.done_reason == "cancelled"
+        assert len(rc.tokens) >= 2 and rc.energy_pj > 0
+        np.testing.assert_array_equal(rc.tokens[:2], np.asarray(got[:2]))
+
+        # deadline: expires mid-flight -> done_reason="timeout"
+        ht = srv.submit(_mk(cfg, rng, 6, max_new=24, seed=2),
+                        deadline_s=0.05)
+        rt = ht.result(timeout=120)
+        assert rt.done_reason == "timeout"
+        assert len(rt.tokens) < 24
+
+        # backpressure: a burst into the 1-deep admission queue must shed
+        # load (the driver can pump at most batch_size + 1 ahead of the
+        # engine, and these arrive faster than any slot can retire)
+        accepted, rejected = [], 0
+        for i in range(8):
+            try:
+                accepted.append(srv.submit(_mk(cfg, rng, 6, max_new=16,
+                                               seed=10 + i)))
+            except RejectedError:
+                rejected += 1
+        assert rejected > 0, "bounded queue never rejected"
+        assert accepted, "burst was rejected entirely"
+        for h in accepted:
+            h.result(timeout=120)
+    assert srv.stats["cancelled"] == 1 and srv.stats["timeout"] == 1
+    assert srv.stats["rejected"] == rejected
+    eng.kv.check()
+    assert not eng.scheduler.busy
