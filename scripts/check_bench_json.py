@@ -30,6 +30,7 @@ REQUIRED = {
         "mixed_placement",
         "shared_prefix",
         "poisson_load",
+        "speculative",
     ],
     "BENCH_kernels.json": ["shape", "cases", "prefill_cases", "ratios"],
 }
@@ -75,6 +76,52 @@ def check_poisson(path, poisson):
                              f"conservation with partials")
 
 
+def check_speculative(path, spec):
+    """Speculative-decoding section (bench_speculative.py).  Gated hard:
+    these are deterministic quantities (frozen noise, exact energy
+    arithmetic), not wall numbers.  The accept rate must be a real rate in
+    (0, 1]; the draft + target energy split must sum to the run's total
+    (the two-placement ledger is one ledger); token identity and energy
+    conservation must hold; and — the paper-facing claim — at accept rate
+    >= 0.5 speculation must record strictly lower analog-corner uJ/token
+    than the non-speculative baseline."""
+    import math
+
+    ar = spec.get("accept_rate")
+    if not (isinstance(ar, (int, float)) and 0.0 < ar <= 1.0):
+        raise SystemExit(f"{path}: speculative accept_rate must be in "
+                         f"(0, 1], got {ar!r}")
+    hist = spec.get("accept_len_hist")
+    if not (isinstance(hist, list) and hist and sum(hist) > 0
+            and all(isinstance(v, int) and v >= 0 for v in hist)):
+        raise SystemExit(f"{path}: speculative accept_len_hist must be a "
+                         f"non-empty histogram, got {hist!r}")
+    for flag in ("token_identity", "energy_conserved"):
+        if not spec.get(flag, False):
+            raise SystemExit(f"{path}: speculative {flag} is false — "
+                             f"speculation changed tokens or broke the "
+                             f"energy ledger")
+    draft = spec.get("draft_energy_uj")
+    target = spec.get("target_energy_uj")
+    total = spec.get("total_energy_uj")
+    for name, v in (("draft", draft), ("target", target), ("total", total)):
+        if not (isinstance(v, (int, float)) and math.isfinite(v) and v >= 0):
+            raise SystemExit(f"{path}: speculative {name}_energy_uj must be "
+                             f"finite and >= 0, got {v!r}")
+    if abs(draft + target - total) > 1e-4 * max(total, 1e-12):
+        raise SystemExit(f"{path}: speculative draft + target energy "
+                         f"({draft} + {target}) != total ({total})")
+    improv = spec.get("analog_uj_per_token_improvement")
+    if not (isinstance(improv, (int, float)) and math.isfinite(improv)):
+        raise SystemExit(f"{path}: speculative analog_uj_per_token_"
+                         f"improvement missing or non-finite: {improv!r}")
+    if ar >= 0.5 and improv <= 0:
+        raise SystemExit(
+            f"{path}: speculation recorded NO analog energy win "
+            f"(improvement {improv} uJ/token at accept rate {ar}) — the "
+            f"verify chunk stopped amortizing the static macro cost")
+
+
 def check(path):
     with open(path) as f:
         report = json.load(f)
@@ -89,6 +136,9 @@ def check(path):
     poisson = report.get("poisson_load")
     if poisson is not None:
         check_poisson(path, poisson)
+    spec = report.get("speculative")
+    if spec is not None:
+        check_speculative(path, spec)
     if name == "BENCH_kernels.json":
         ratio = report["ratios"]["fused_vs_gather_clamped"]["occ100_max"]
         if ratio > FUSED_RATIO_BOUND:

@@ -249,10 +249,15 @@ def emt_dense(params: dict, x, cfg: EMTConfig, *, tag: str,
     w_norm = jax.lax.stop_gradient(
         jnp.sum(jnp.abs(wq.astype(jnp.float32))) / jnp.maximum(jnp.max(jnp.abs(wq)), 1e-8))
     rho_sg = jax.lax.stop_gradient(rho)
+    # tile count of this layer on the crossbar fabric (fractional for layers
+    # smaller than one tile — they still only bias a fraction of a macro)
+    n_tiles = (d_in / cfg.crossbar_tile) * max(1.0, d_out / cfg.crossbar_tile)
     aux["energy_pj"] = (
         cfg.device.mac_energy(rho_sg, w_norm, x_level, reads_per_cell)
-        + cfg.device.peripheral_energy(
-            n_tokens * (d_in / cfg.crossbar_tile) * max(1.0, d_out / cfg.crossbar_tile)))
+        + cfg.device.peripheral_energy(n_tokens * n_tiles)
+        # static macro-activation cost: paid once per tile per step window,
+        # NOT per streamed lane — this is what multi-lane verify amortizes.
+        + cfg.device.static_energy(n_tiles))
     aux["energy_pj"] = jnp.float32(aux["energy_pj"])
     # Technique B loss term (Eq. 13): alpha * rho * sum|w|, alpha = reads per token
     # (normalized per-token so lambda has a model-size-independent meaning).

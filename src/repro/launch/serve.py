@@ -38,6 +38,18 @@ Flags (new continuous-batching engine):
     --prefix-cache     refcounted prefix caching (needs --paged, an all-global
                        attention stack): shared prompt prefixes are served
                        from resident blocks and bill zero prefill energy
+    --draft-placement CORNER
+                       heterogeneous speculative decoding: draft k tokens per
+                       slot on this (cheap, digital) corner and verify them in
+                       one all-lane chunk step on the target placement
+                       (greedy-only; docs/control_plane.md)
+    --spec-k K         draft tokens proposed per speculative round (default 4)
+    --energy-budget-uj B
+                       per-request energy SLA: requests exceeding B uJ of
+                       billed energy are shed (done_reason="energy_budget")
+    --step-budget-uj B rolling per-engine admission bucket: the engine earns
+                       B uJ of credit per step; admission head-blocks while
+                       the bucket is overdrawn
     --rate R           streaming front-end mode: drive the engine through
                        repro.serve.server.StreamingServer with open-loop
                        Poisson arrivals at R req/s (replaces --stagger) and
@@ -174,6 +186,16 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="refcounted prefix caching over the paged pool "
                          "(requires --paged + all-global attention)")
+    ap.add_argument("--draft-placement", default=None,
+                    help="speculative decoding: registered corner for the "
+                         "draft placement (e.g. sram_digital); greedy-only")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--energy-budget-uj", type=float, default=None,
+                    help="per-request energy SLA in uJ (exceeded -> shed "
+                         "with done_reason='energy_budget')")
+    ap.add_argument("--step-budget-uj", type=float, default=None,
+                    help="per-engine rolling admission budget in uJ/step")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="streaming front-end: open-loop Poisson arrival "
                          "rate in req/s (0 = synchronous --stagger driver)")
@@ -196,20 +218,41 @@ def main():
     cfg = cfg.replace(dtype=jnp.float32,
                       fused_paged_attn=args.fused_paged_attn,
                       paged_attn_impl=args.paged_attn_impl)
+    if args.draft_placement and cfg.sliding_window and "local" in cfg.blocks():
+        # speculation requires an all-global stack (rejected-draft writes
+        # would clobber sliding-window ring K/V — see SpeculativeEngine):
+        # swap the ring layers out of the serving config up front
+        cfg = cfg.replace(layer_pattern=("attn",), sliding_window=0)
+        print("speculative decoding: coerced attention stack to all-global "
+              "(ring layers are incompatible with rejected-draft writes)")
     print_plan(cfg)
     if args.paged:
         print_attn_paths(cfg)
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     n_req = args.requests or args.batch
-    eng = ServingEngine(cfg, params, batch_size=args.batch,
-                        max_len=prefill_bucket(args.prompt_len) + args.max_new,
-                        seed=args.seed, fresh_noise=not args.frozen_noise,
-                        paged=args.paged, block_size=args.block_size,
-                        num_blocks=args.kv_blocks,
-                        num_ring_blocks=args.kv_ring_blocks,
-                        chunked_prefill=args.chunked_prefill,
-                        prefill_chunk=args.prefill_chunk,
-                        prefix_cache=args.prefix_cache)
+    controller = None
+    if args.step_budget_uj is not None or args.energy_budget_uj is not None:
+        from repro.serve.control import EnergyBudgetController
+        controller = EnergyBudgetController(step_budget_uj=args.step_budget_uj)
+    common_kw = dict(
+        batch_size=args.batch,
+        max_len=prefill_bucket(args.prompt_len) + args.max_new,
+        seed=args.seed, fresh_noise=not args.frozen_noise,
+        paged=args.paged, block_size=args.block_size,
+        num_blocks=args.kv_blocks,
+        num_ring_blocks=args.kv_ring_blocks,
+        chunked_prefill=args.chunked_prefill,
+        prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache, controller=controller)
+    if args.draft_placement:
+        from repro.serve.speculative import SpeculativeEngine
+        eng = SpeculativeEngine(cfg, params,
+                                draft_placement=args.draft_placement,
+                                spec_k=args.spec_k, **common_kw)
+        print(f"speculative decoding: draft on {args.draft_placement}, "
+              f"k={args.spec_k}")
+    else:
+        eng = ServingEngine(cfg, params, **common_kw)
     print(f"prefill path: "
           f"{'chunked (exact positions, mixed step)' if eng.chunked else 'legacy (batch-1 pow2 buckets)'}"
           + (f", chunk={eng.prefill_chunk}, prefix_cache=on"
@@ -220,7 +263,7 @@ def main():
                                            size=args.prompt_len).astype(np.int32),
                        max_new=args.max_new, temperature=args.temperature,
                        top_k=args.top_k, top_p=args.top_p, eos_id=args.eos_id,
-                       seed=i)
+                       seed=i, energy_budget_uj=args.energy_budget_uj)
             for i in range(n_req)]
 
     if args.rate > 0:
@@ -263,6 +306,17 @@ def main():
         per_tok = r.energy_pj * 1e-6 / max(len(r.tokens), 1)
         print(f"  req{r.rid}: {len(r.tokens)} toks, {per_tok:.4f} uJ/token, "
               f"{r.done_reason}: {r.tokens[:6].tolist()}")
+    if args.draft_placement:
+        shed = sum(1 for r in results if r.done_reason == "energy_budget")
+        print(f"speculation: accept rate {eng.accept_rate:.2f}, "
+              f"accepted-length histogram {eng.accept_len_hist.tolist()}, "
+              f"draft energy {eng.draft_total_energy_pj*1e-6:.3f} uJ "
+              f"({eng.draft_total_energy_pj/max(eng.total_energy_pj,1e-12)*100:.1f}% of total)"
+              + (f", shed {shed}" if shed else ""))
+    if controller is not None:
+        print(f"control plane: shed {controller.shed} on request budgets, "
+              f"deferred {controller.deferred_steps} admissions on the "
+              f"engine bucket")
     if eng.corner_energy_pj:
         from repro.analysis.report import corner_table
         print("per-corner energy:")

@@ -285,7 +285,8 @@ def _cache_len(cache):
 
 
 def chunk_step(params, cache, tokens, start, ntok, cfg: ModelConfig, ctx: Ctx,
-               active=None, page_tables=None, page_lens=None):
+               active=None, page_tables=None, page_lens=None,
+               all_lanes: bool = False):
     """One mixed prefill+decode step over a (B, C) token chunk.
 
     The continuous-batching engine admits long prompts as a stream of
@@ -304,7 +305,10 @@ def chunk_step(params, cache, tokens, start, ntok, cfg: ModelConfig, ctx: Ctx,
     skip padded lanes; enc-dec needs the encoder pass) — the engine keeps the
     legacy bucketed path for those.
 
-    Returns (last_valid_logits (B, vocab), new_cache, aux).
+    Returns (last_valid_logits (B, vocab), new_cache, aux) — or, with
+    ``all_lanes=True``, the full per-lane logits (B, C, vocab): the verify
+    primitive of speculative decoding (serve/speculative.py), where lane j's
+    logits score the draft token proposed for position ``start[b] + j + 1``.
     """
     B, C = tokens.shape
     x = common.embed(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
@@ -331,17 +335,24 @@ def chunk_step(params, cache, tokens, start, ntok, cfg: ModelConfig, ctx: Ctx,
         tag="dec", positions=wpos, mask=masks, caches=cache, cache_index=start,
         remat=False, active=active, page_tables=page_tables,
         page_lens=page_lens, chunk_lens=ntok)
-    # only each row's last real lane feeds sampling (decode rows: their one
-    # token; prefill rows: the final prompt token on their last chunk)
-    h_last = jnp.take_along_axis(h, (ntok - 1)[:, None, None], axis=1)
-    h_last = common.rmsnorm(params["final_norm"], h_last, cfg.norm_eps)
-    logits, a = _logits(params, h_last, cfg, ctx)
+    if all_lanes:
+        # verify mode: every lane's logits are consumed (lane j scores the
+        # next-token distribution after the chunk prefix ..start+j), so the
+        # unembed runs — and bills energy — over all C lanes.
+        h = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits, a = _logits(params, h, cfg, ctx)
+    else:
+        # only each row's last real lane feeds sampling (decode rows: their
+        # one token; prefill rows: the final prompt token on their last chunk)
+        h_last = jnp.take_along_axis(h, (ntok - 1)[:, None, None], axis=1)
+        h_last = common.rmsnorm(params["final_norm"], h_last, cfg.norm_eps)
+        logits, a = _logits(params, h_last, cfg, ctx)
     aux = add_aux(aux, a)
     merged = {}
     for k in cache:
         upd = new_caches.get(k)
         merged[k] = {**cache[k], **upd} if upd else cache[k]
-    return logits[:, 0], merged, aux
+    return (logits if all_lanes else logits[:, 0]), merged, aux
 
 
 def decode_step(params, cache, tokens, index, cfg: ModelConfig, ctx: Ctx,

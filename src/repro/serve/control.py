@@ -1,0 +1,107 @@
+"""Energy-aware control plane for the serving engine (host-side, pure
+Python — no jax in this module).
+
+The repo's energy accounting is exact — every jitted step's EMT energy is
+split across the active slots and the conservation invariant *per-request +
+idle == total* holds to float tolerance (see docs/serving.md) — but until
+this module nothing *acted* on it.  The control plane turns the meter into
+policy, at two scopes:
+
+* **Per-request SLA** (:attr:`~repro.serve.engine.GenRequest.energy_budget_uj`):
+  a request may carry a hard uJ budget.  After every engine step the
+  controller compares the energy billed to each active slot (prefill +
+  decode + draft share) against its budget and sheds exhausted requests
+  through the normal cancel/retire path with ``done_reason="energy_budget"``
+  — the slot's partial tokens and billed energy ride out on the result, so
+  conservation keeps holding with shed partials.  The shed is *post-hoc*:
+  the step that crossed the budget is still billed (the energy was already
+  spent in the crossbars); the SLA bounds the overrun to one step's share.
+
+* **Per-engine admission** (rolling uJ bucket): the engine earns
+  ``step_budget_uj`` of credit per jitted step (the step *is* the engine's
+  clock — idle engines spend nothing) up to a ``burst_uj`` cap, and every
+  step's booked energy (all slots + idle share, both placements of a
+  speculative engine) is debited.  While the bucket is overdrawn, admission
+  of *new* requests head-blocks in the FIFO exactly like the paged
+  free-block budget; already-admitted requests are never shed by the bucket
+  (shedding work whose energy is already spent saves nothing).  One
+  deliberate exception prevents deadlock and wasted idle power: an engine
+  with **no active slots** always admits — deferring the only runnable
+  request would stall the clock that refills the bucket.
+
+One controller instance serves one engine (it tracks the engine's step/energy
+counters by delta).  Wire it up via ``ServingEngine(..., controller=...)``;
+the streaming front-end needs no changes — shed requests surface exactly
+like cancellations, with their own ``done_reason``.  See
+docs/control_plane.md for the policy discussion.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class EnergyBudgetController:
+    """uJ-budget admission gate + per-request energy-SLA shedding."""
+
+    def __init__(self, step_budget_uj: Optional[float] = None,
+                 burst_uj: Optional[float] = None):
+        if step_budget_uj is not None and not step_budget_uj > 0:
+            raise ValueError(f"step_budget_uj must be > 0, "
+                             f"got {step_budget_uj}")
+        self.step_budget_uj = step_budget_uj
+        # default burst: 16 steps of credit — enough to absorb a prefill
+        # burst without letting the engine run unboundedly hot
+        if burst_uj is None and step_budget_uj is not None:
+            burst_uj = 16.0 * step_budget_uj
+        self.burst_uj = burst_uj
+        # the bucket starts full: a fresh engine may spend its burst
+        self.balance_uj = burst_uj if burst_uj is not None else 0.0
+        self._seen_steps = 0
+        self._seen_energy_pj = 0.0
+        # observability counters (read by benches/tests/the launch report)
+        self.shed = 0                # requests shed on their own budget
+        self.deferred_steps = 0      # admission attempts deferred by the bucket
+
+    # -- bucket bookkeeping --------------------------------------------------
+    def _sync(self, engine) -> None:
+        """Fold the engine's progress since the last look into the bucket:
+        credit per new jitted step, debit the energy booked meanwhile."""
+        if self.step_budget_uj is None:
+            return
+        dsteps = engine._steps - self._seen_steps
+        de_pj = engine.total_energy_pj - self._seen_energy_pj
+        self._seen_steps = engine._steps
+        self._seen_energy_pj = engine.total_energy_pj
+        self.balance_uj = min(
+            self.burst_uj,
+            self.balance_uj + dsteps * self.step_budget_uj) - de_pj * 1e-6
+
+    # -- engine hooks --------------------------------------------------------
+    def may_admit(self, engine) -> bool:
+        """Admission gate, called per queued request from the engine's FIFO
+        admission loop.  False head-blocks the queue this step."""
+        if self.step_budget_uj is None:
+            return True
+        self._sync(engine)
+        if engine.scheduler.num_active == 0:
+            return True              # idle engine: never deadlock the clock
+        if self.balance_uj <= 0.0:
+            self.deferred_steps += 1
+            return False
+        return True
+
+    def over_budget(self, engine) -> List[int]:
+        """Rids of active requests whose billed energy exceeded their own
+        energy_budget_uj — the engine cancels them with
+        ``done_reason="energy_budget"`` after each step."""
+        self._sync(engine)
+        shed = []
+        for _, s in engine.scheduler.active_slots():
+            budget = getattr(s.req, "energy_budget_uj", None)
+            if budget is None:
+                continue
+            billed_uj = (s.prefill_energy_pj + s.energy_pj) * 1e-6
+            if billed_uj >= budget:
+                shed.append(s.rid)
+        self.shed += len(shed)
+        return shed

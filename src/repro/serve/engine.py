@@ -184,6 +184,37 @@ def make_chunk_step(cfg: ModelConfig, mesh: Optional[Mesh], rules,
     return chunk_step
 
 
+def make_verify_step(cfg: ModelConfig, mesh: Optional[Mesh], rules,
+                     page_lens: Optional[dict] = None):
+    """Speculative-decoding verify step: one lm.chunk_step over the
+    [last_token, draft_1..draft_k] chunk of every slot with `all_lanes=True`,
+    returning the per-lane greedy argmax (B, C) — lane j's token is the
+    target model's greedy continuation after ..start+j, i.e. the token that
+    validates draft j+1 (or replaces it on rejection).  Greedy only: the
+    argmax matches sampling.sample_tokens at temperature 0 bit-exactly, which
+    is what makes speculative decoding token-identical to plain decode."""
+    shard = make_shard_fn(mesh, rules) if mesh is not None else (lambda x, n: x)
+
+    def verify_step(params, cache, tokens, start, ntok, active, seed,
+                    table_g=None, table_l=None, view_len=0):
+        ctx = Ctx(seed=seed, shard=shard)
+        pt = pl = None
+        if page_lens is not None:
+            pt = {"global": table_g, "local": table_l}
+            pl = lm.clamped_lens(page_lens, view_len)
+        logits, cache, aux = lm.chunk_step(params, cache, tokens, start, ntok,
+                                           cfg, ctx, active=active,
+                                           page_tables=pt, page_lens=pl,
+                                           all_lanes=True)
+        greedy = jnp.argmax(logits.astype(jnp.float32), axis=-1) \
+                    .astype(jnp.int32)
+        return greedy, cache, {"energy_pj": aux["energy_pj"],
+                               "corners": aux["corners"],
+                               "kv_reads": aux["kv_reads"]}
+
+    return verify_step
+
+
 def make_pool_copy(cfg: ModelConfig):
     """Copy one global-pool block row src -> dst across every attention
     layer's K/V pools — the device half of prefix-cache copy-on-write (the
@@ -327,6 +358,11 @@ class GenRequest:
     top_p: float = 1.0               # >=1 = disabled
     seed: int = 0                    # sampling seed (deterministic per request)
     eos_id: Optional[int] = None     # stop token (None = run to max_new)
+    # per-request energy SLA: once the energy billed to this request
+    # (prefill + decode + draft) exceeds the budget, the control plane sheds
+    # it through the normal cancel path with done_reason="energy_budget"
+    # (None = no budget; see serve/control.py)
+    energy_budget_uj: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -336,11 +372,19 @@ class GenResult:
     energy_pj: float                 # total EMT energy billed to this request
     prefill_energy_pj: float         # ... of which prefill
     steps: int                       # decode steps the request participated in
-    # "eos" | "max_new" | "max_len" | "cancelled" | "timeout" — the last two
-    # come from ServingEngine.cancel(): the slot retired early with whatever
-    # partial tokens/energy it had accumulated (per-request + idle == total
-    # energy conservation holds for partials too)
+    # "eos" | "max_new" | "max_len" | "cancelled" | "timeout" |
+    # "energy_budget" — the last three come from ServingEngine.cancel(): the
+    # slot retired early with whatever partial tokens/energy it had
+    # accumulated (per-request + idle == total energy conservation holds for
+    # partials too). "energy_budget" is the control plane shedding a request
+    # that exhausted its energy_budget_uj (serve/control.py).
     done_reason: str
+    # speculative decoding split (serve/speculative.py; 0 on plain engines):
+    # draft_energy_pj is the subset of energy_pj billed on the draft
+    # placement; spec_accepted/spec_proposed give the request's accept rate
+    draft_energy_pj: float = 0.0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
 
 def prefill_bucket(n: int, lo: int = 4) -> int:
@@ -373,7 +417,8 @@ class ServingEngine:
                  chunked_prefill: Optional[bool] = None,
                  prefill_chunk: int = 16, prefix_cache: bool = False,
                  max_pending: Optional[int] = None,
-                 on_token: Optional[Callable[[int, int], None]] = None):
+                 on_token: Optional[Callable[[int, int], None]] = None,
+                 controller=None):
         if placement is not None:
             # heterogeneous device placement (EMTConfig or DevicePlacement):
             # overrides the config's EMT surface for this engine. Params must
@@ -467,6 +512,10 @@ class ServingEngine:
         # per-request event queues.  Must be cheap and must not touch the
         # engine (it runs mid-step).
         self.on_token = on_token
+        # energy-aware control plane (serve/control.py): gates admission
+        # against a rolling per-engine uJ bucket and sheds requests that
+        # exhaust their per-request energy_budget_uj (None = no control)
+        self.controller = controller
         self.total_energy_pj = 0.0
         self.idle_energy_pj = 0.0    # decode energy of idle slots (waste)
         # per-corner energy totals (prefill + decode), keyed by the placement's
@@ -567,6 +616,9 @@ class ServingEngine:
             raise ValueError(f"top_p must be >= 0, got {req.top_p}")
         if req.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {req.top_k}")
+        if req.energy_budget_uj is not None and not req.energy_budget_uj > 0:
+            raise ValueError(f"energy_budget_uj must be > 0, "
+                             f"got {req.energy_budget_uj}")
         if self.paged:
             # FIFO admission head-blocks: a request that cannot fit even an
             # empty pool would deadlock the queue, so refuse it up front
@@ -587,15 +639,38 @@ class ServingEngine:
 
     def step(self) -> List[GenResult]:
         """Admit queued requests into free slots (paged: against the
-        free-block budget), then advance every active slot one step: a mixed
+        free-block budget; with a controller, also against the rolling uJ
+        bucket), then advance every active slot one step: a mixed
         prefill+decode chunk step while any slot is still streaming its
-        prompt (chunked mode), a pure decode step otherwise.  Returns
-        requests finished this step."""
+        prompt (chunked mode), a pure decode step otherwise.  Finally the
+        control plane sheds any request that exhausted its energy budget.
+        Returns requests finished this step."""
+        finished = self._admit_pending()
+        active = self.scheduler.active_slots()
+        if active:
+            if self.chunked and any(s.prefilling for _, s in active):
+                finished += self._chunk_advance(active)
+            else:
+                finished += self._decode_advance(active)
+        if self.controller is not None:
+            for rid in self.controller.over_budget(self):
+                res = self.cancel(rid, reason="energy_budget")
+                if res is not None:
+                    finished.append(res)
+        return finished
+
+    def _admit_pending(self) -> List[GenResult]:
+        """FIFO admission into free slots: stops at the first request the
+        block budget (paged) or the controller's uJ bucket cannot take —
+        head-blocking keeps admission order deterministic."""
         finished = []
         while self.scheduler.pending:
             rid, req = self.scheduler.peek_pending()
             if not self.scheduler.can_admit(self._bucket_len(len(req.prompt)),
                                             req.max_new):
+                break
+            if self.controller is not None and \
+                    not self.controller.may_admit(self):
                 break
             self.scheduler.pop_pending()
             sid = self.scheduler.free_slot()
@@ -603,13 +678,13 @@ class ServingEngine:
             done = self._maybe_retire(sid)
             if done is not None:
                 finished.append(done)
+        return finished
 
-        active = self.scheduler.active_slots()
-        if not active:
-            return finished
-        if self.chunked and any(s.prefilling for _, s in active):
-            return finished + self._chunk_advance(active)
-
+    def _decode_advance(self, active) -> List[GenResult]:
+        """Advance every decode-phase slot one generated token in one jitted
+        pure-decode step (SpeculativeEngine overrides this with a
+        draft-k/verify-one round)."""
+        finished = []
         B = self.batch_size
         tokens = np.zeros(B, np.int32)
         index = np.zeros(B, np.int32)
@@ -991,4 +1066,6 @@ class ServingEngine:
             rid=slot.rid, tokens=np.asarray(slot.generated, np.int32),
             energy_pj=slot.prefill_energy_pj + slot.energy_pj,
             prefill_energy_pj=slot.prefill_energy_pj, steps=slot.steps,
-            done_reason=reason)
+            done_reason=reason, draft_energy_pj=slot.draft_energy_pj,
+            spec_proposed=slot.spec_proposed,
+            spec_accepted=slot.spec_accepted)

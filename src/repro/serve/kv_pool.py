@@ -77,8 +77,9 @@ class BlockPool:
 
     Blocks live in exactly one of three states: **blank-free** (zeroed on
     device), **cached-free** (refcount 0 but registered under a prefix key —
-    content retained, evictable LRU), or **active** (refcount >= 1, possibly
-    shared by several owners).  Eviction happens lazily inside allocation;
+    content retained, evictable coldest-first by decayed hit count), or
+    **active** (refcount >= 1, possibly shared by several owners).  Eviction
+    happens lazily inside allocation;
     evicted ids accumulate until :meth:`pop_evicted` so the engine can zero
     their stale content on device before the new owner writes.
     """
@@ -99,6 +100,15 @@ class BlockPool:
         self._key_tokens: Dict[bytes, np.ndarray] = {}
         self._children: Dict[Optional[bytes], List[bytes]] = {}
         self._evicted: List[int] = []
+        # reuse-weighted eviction: each registered block carries a decayed
+        # hit count; eviction takes the *coldest* cached block (lowest
+        # weight, oldest release breaking ties) instead of blind LRU, and
+        # every eviction decays the survivors so ancient popularity fades
+        # under sustained churn.  A hot shared prefix therefore survives a
+        # stream of cold one-shot prompts that would have rotated it out of
+        # a pure LRU (tests/test_prefix_cache.py).
+        self._reuse: Dict[int, float] = {}          # bid -> decayed hit count
+        self.reuse_decay = 0.9
         # counters (reported by the engine / benchmarks)
         self.hits = 0
         self.evictions = 0
@@ -164,9 +174,15 @@ class BlockPool:
         self._key_parent[key] = parent
         self._key_tokens[key] = np.ascontiguousarray(tokens, np.int32).copy()
         self._children.setdefault(parent, []).append(key)
+        self._reuse[bid] = 0.0
         return True
 
+    def reuse_weight(self, bid: int) -> float:
+        """Decayed hit count driving eviction order (registered blocks)."""
+        return self._reuse.get(bid, 0.0)
+
     def _unregister(self, bid: int) -> None:
+        self._reuse.pop(bid, None)
         key = self._block_key.pop(bid)
         del self._key_to_block[key]
         parent = self._key_parent.pop(key)
@@ -177,17 +193,28 @@ class BlockPool:
 
     # -- mutation ------------------------------------------------------------
     def _take_block(self, avoid=()) -> Optional[int]:
-        """Pop a blank block, evicting the LRU cached-free block if needed."""
+        """Pop a blank block; if none, evict the *coldest* cached-free block
+        (lowest decayed hit count, oldest release breaking ties) and decay
+        the survivors' weights."""
         if self._free:
             return self._free.pop()
-        for bid in self._cached:                    # oldest release first
-            if bid not in avoid:
-                del self._cached[bid]
-                self._unregister(bid)
-                self._evicted.append(bid)
-                self.evictions += 1
-                return bid
-        return None
+        victim = None
+        for idx, bid in enumerate(self._cached):    # idx = release order
+            if bid in avoid:
+                continue
+            rank = (self._reuse.get(bid, 0.0), idx)
+            if victim is None or rank < victim[0]:
+                victim = (rank, bid)
+        if victim is None:
+            return None
+        bid = victim[1]
+        del self._cached[bid]
+        self._unregister(bid)
+        self._evicted.append(bid)
+        self.evictions += 1
+        for other in self._cached:
+            self._reuse[other] *= self.reuse_decay
+        return bid
 
     def pop_evicted(self) -> List[int]:
         """Block ids evicted from the prefix cache since the last call — their
@@ -228,6 +255,7 @@ class BlockPool:
             self._ref[bid] += 1
         self._owned.setdefault(owner, []).append(bid)
         self.hits += 1
+        self._reuse[bid] = self._reuse.get(bid, 0.0) + 1.0
 
     def append(self, owner: int) -> int:
         """Convert one of `owner`'s reservation credits into a block."""
@@ -281,6 +309,8 @@ class BlockPool:
             "registry out of sync"
         for bid in self._cached:
             assert bid in self._block_key, "cached block without a key"
+        assert set(self._reuse) == set(self._block_key), \
+            "reuse weights out of sync with the registry"
 
 
 class PagedKV:

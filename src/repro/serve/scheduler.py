@@ -44,6 +44,12 @@ class Slot:
     prefill_energy_pj: float = 0.0
     steps: int = 0                  # decode steps this request participated in
     enc_len: int = 0                # real encoder positions cached (enc-dec)
+    # speculative decoding (serve/speculative.py; all zero on plain engines):
+    # the subset of energy_pj/prefill_energy_pj billed on the draft
+    # placement, and the request's draft-token proposal/acceptance counters
+    draft_energy_pj: float = 0.0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
     # chunked prefill: the prompt still being streamed into the cache.  While
     # `pos < len(prompt)` the slot is in the prefill phase: each mixed step
     # consumes up to `prefill_chunk` prompt tokens at positions [pos, ...)

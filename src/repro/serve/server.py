@@ -163,7 +163,7 @@ class StreamingServer:
         self._thread: Optional[threading.Thread] = None
         self.error: Optional[BaseException] = None
         self.stats = {"submitted": 0, "rejected": 0, "completed": 0,
-                      "cancelled": 0, "timeout": 0}
+                      "cancelled": 0, "timeout": 0, "energy_budget": 0}
         engine.on_token = self._on_token
 
     # -- lifecycle -----------------------------------------------------------
@@ -313,8 +313,8 @@ class StreamingServer:
             return                           # not server-submitted (warmup)
         if h.rid is not None:
             self._by_rid.pop(h.rid, None)
-        key = res.done_reason if res.done_reason in ("cancelled", "timeout",
-                                                     "error") else "completed"
+        key = res.done_reason if res.done_reason in (
+            "cancelled", "timeout", "error", "energy_budget") else "completed"
         with self._lock:
             self.stats[key] = self.stats.get(key, 0) + 1
         h._finish(res)

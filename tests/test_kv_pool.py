@@ -80,6 +80,49 @@ def test_conservation_under_random_churn():
     assert pool.num_free == 16 and pool.num_owned == 0
 
 
+def test_reuse_weighted_eviction_keeps_hot_prefix():
+    """Regression for blind-LRU eviction: a hot shared-prefix block (many
+    cache hits) must survive churn from cold single-use blocks even when it
+    is the *oldest* release in the cached-free list — exactly the case where
+    pure LRU rotated the shared system prompt out of the cache."""
+    pool = BlockPool(num_blocks=6, block_size=4)
+    toks = np.arange(4, dtype=np.int32)
+
+    def park(owner, key):
+        (bid,) = pool.alloc(owner, 1)
+        assert pool.register(bid, key, None, toks)
+        pool.free(owner)                     # registered -> cached-free
+        return bid
+
+    hot = park(0, b"hot")
+    for i in range(3):                       # three prefix-cache hits
+        pool.acquire(100 + i, hot)
+        pool.free(100 + i)
+    cold = [park(10 + i, b"c%d" % i) for i in range(3)]
+    # hot parked first (oldest release), weight 3; colds parked after, weight 0
+    assert pool.reuse_weight(hot) == 3.0
+    pool.check()
+
+    # 2 blanks remain; asking for 4 forces two evictions — the two coldest
+    # (FIFO among the never-hit blocks), never the hot block
+    assert pool.alloc(50, 4) is not None
+    assert pool.lookup(b"hot") == hot
+    assert pool.lookup(b"c0") is None and pool.lookup(b"c1") is None
+    assert pool.lookup(b"c2") == cold[2]
+    # survivors decay once per eviction: 3 * 0.9^2
+    assert np.isclose(pool.reuse_weight(hot), 3.0 * 0.9**2)
+    pool.check()
+
+    # keep churning: hot outlives the last cold block too, and is evicted
+    # only when it is the sole remaining candidate
+    assert pool.alloc(51, 1) is not None
+    assert pool.lookup(b"c2") is None and pool.lookup(b"hot") == hot
+    assert pool.alloc(52, 1) is not None
+    assert pool.lookup(b"hot") is None
+    assert sorted(pool.pop_evicted()) == sorted(cold + [hot])
+    pool.check()
+
+
 def test_paged_kv_admit_tables_and_release():
     kv = PagedKV(batch_size=2, max_len=16, block_size=4, num_blocks=5,
                  ring_len=8, num_ring_blocks=4)

@@ -1,0 +1,242 @@
+"""Heterogeneous speculative decoding: token identity + two-placement energy.
+
+The control-plane PR's core property (docs/control_plane.md): a
+`SpeculativeEngine` drafting on a `sram_digital` placement and verifying in
+one all-lane analog chunk step commits *exactly* the tokens plain greedy
+decode on the target placement would — under ideal EMT and under analog
+with per-row DAC scales and frozen noise — while the energy ledger keeps
+per-request + idle == total across **both** placements' corners, with the
+draft/verify split carrying its own conservation invariant.  Cancellation
+mid-decode and rejected drafts (a deliberately perturbed draft model) must
+not break either property.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.emt_linear import IDEAL
+from repro.core.placement import emt_for_corner
+from repro.models import lm
+from repro.nn.param import init_params
+from repro.serve.engine import GenRequest, ServingEngine
+from repro.serve.speculative import SpeculativeEngine
+
+K = 3
+
+
+def _base_cfg(**kw):
+    # all-global stack (rejected drafts would clobber ring K/V) + ref paged
+    # attention off the kernel path; float32 keeps argmax comparisons exact
+    cfg = get_config("gemma3-1b", smoke=True, **kw)
+    return cfg.replace(dtype=jnp.float32, num_layers=2,
+                       layer_pattern=("attn",), sliding_window=0,
+                       paged_attn_impl="ref")
+
+
+def _pcm_cfg():
+    # analog PCM target with per-row DAC scales: per-tensor activation quant
+    # couples the verify lanes through the shared scale, so only a_per_row
+    # guarantees bit-identity between a (k+1)-lane step and k+1 1-lane steps
+    cfg = _base_cfg(emt_mode="analog")
+    tgt = emt_for_corner("pcm")
+    tgt = tgt.replace(quant=dataclasses.replace(tgt.quant, a_per_row=True))
+    return cfg.replace(emt=tgt)
+
+
+def _reqs(cfg, lens=((8, 16), (5, 10)), base_seed=0, **kw):
+    out = []
+    for i, (plen, max_new) in enumerate(lens):
+        rng = np.random.default_rng(base_seed + i)
+        out.append(GenRequest(
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new=max_new, **kw))
+    return out
+
+
+def _mk_spec(cfg, params, **kw):
+    kw.setdefault("spec_k", K)
+    return SpeculativeEngine(cfg, params, batch_size=2, max_len=32, seed=7,
+                             fresh_noise=False, **kw)
+
+
+def _assert_conservation(eng, results):
+    """Combined + per-corner + draft-split invariants over `results`, which
+    must be *every* result the engine ever retired."""
+    assert np.isclose(sum(r.energy_pj for r in results)
+                      + eng.idle_energy_pj, eng.total_energy_pj, rtol=1e-6)
+    assert np.isclose(sum(eng.corner_energy_pj.values()),
+                      eng.total_energy_pj, rtol=1e-6)
+    assert np.isclose(sum(r.draft_energy_pj for r in results)
+                      + eng.draft_idle_energy_pj,
+                      eng.draft_total_energy_pj, rtol=1e-6)
+    # the draft subset is genuinely a subset, booked under its own corner
+    assert eng.draft_total_energy_pj <= eng.total_energy_pj
+    assert np.isclose(eng.corner_energy_pj.get("sram_digital", 0.0),
+                      eng.draft_total_energy_pj, rtol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def pcm():
+    cfg = _pcm_cfg()
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    base = ServingEngine(cfg, params, batch_size=2, max_len=32, seed=7,
+                         fresh_noise=False)
+    spec = _mk_spec(cfg, params)
+    base_res = base.serve(_reqs(cfg))
+    spec_res = spec.serve(_reqs(cfg))
+    return dict(cfg=cfg, params=params, base=base, spec=spec,
+                base_res=base_res, spec_res=spec_res,
+                spec_history=list(spec_res))
+
+
+def test_token_identity_analog_per_row(pcm):
+    for a, b in zip(pcm["base_res"], pcm["spec_res"]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert b.done_reason == a.done_reason
+    spec = pcm["spec"]
+    assert spec.spec_rounds > 0
+    assert 0.0 < spec.accept_rate <= 1.0
+    assert spec.accept_len_hist.sum() == spec.spec_rounds
+    for r in pcm["spec_res"]:
+        assert r.spec_proposed >= r.spec_accepted >= 0
+        assert r.draft_energy_pj > 0.0
+
+
+def test_two_placement_energy_conservation(pcm):
+    # the combined ledger spans both engines' corners: analog pcm + digital
+    # draft sum (with idle) to the one total, and the draft split conserves
+    # on its own
+    spec = pcm["spec"]
+    assert set(spec.corner_energy_pj) >= {"pcm", "sram_digital"}
+    assert spec.corner_energy_pj["pcm"] > 0.0
+    assert spec.corner_energy_pj["sram_digital"] > 0.0
+    _assert_conservation(spec, pcm["spec_res"])
+    # plain engines never bill the draft corner or the split fields
+    base = pcm["base"]
+    assert "sram_digital" not in base.corner_energy_pj
+    assert all(r.draft_energy_pj == 0.0 and r.spec_proposed == 0
+               for r in pcm["base_res"])
+
+
+def test_token_identity_staggered_admission(pcm):
+    # staggered arrivals exercise mixed rounds (one slot streaming prompt
+    # lanes through the verify chunk while the other speculates) and k_eff
+    # clamping near per-request token budgets; identity must hold against
+    # the *solo* baseline because a_per_row + frozen noise decouple
+    # co-tenants — even though the spec engine splits the prompt across
+    # several (k+1)-lane rounds where the baseline prefills it in one chunk
+    reqs = _reqs(pcm["cfg"], lens=((6, 12), (9, 14)), base_seed=50)
+    solo = pcm["base"].serve(_reqs(pcm["cfg"], lens=((6, 12),), base_seed=50))
+    stag = pcm["spec"].serve(reqs, stagger=2)
+    pcm["spec_history"].extend(stag)
+    np.testing.assert_array_equal(solo[0].tokens, stag[0].tokens)
+    _assert_conservation(pcm["spec"], pcm["spec_history"])
+
+
+def test_rejected_drafts_keep_identity(pcm):
+    # a deliberately perturbed draft model proposes junk some of the time:
+    # the accept rate drops below 1 but every committed token is still the
+    # target's greedy token — the rejected-lane K/V writes are provably
+    # overwritten before any later query can attend them
+    cfg, params = pcm["cfg"], pcm["params"]
+    bad = jax.tree.map(
+        lambda x: x * (1.0 + 0.05 * np.sin(np.arange(x.size, dtype=np.float32)
+                                           .reshape(x.shape)))
+        if x.dtype == jnp.float32 else x, params)
+    spec = _mk_spec(cfg, params, draft_params=bad)
+    res = spec.serve(_reqs(cfg))
+    assert spec.accept_rate < 1.0
+    for a, b in zip(pcm["base_res"], res):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    _assert_conservation(spec, res)
+
+
+def test_token_identity_ideal_mode():
+    # ideal params carry no rho_raw, so the draft must be an ideal placement
+    # too — which makes draft and target the *same* computation: every
+    # proposal must be accepted (accept rate exactly 1) and identity holds
+    cfg = _base_cfg(emt_mode="ideal")
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(1))
+    base = ServingEngine(cfg, params, batch_size=2, max_len=32, seed=7,
+                         fresh_noise=False)
+    spec = _mk_spec(cfg, params, draft_placement=IDEAL)
+    rb = base.serve(_reqs(cfg))
+    rs = spec.serve(_reqs(cfg))
+    for a, b in zip(rb, rs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert spec.spec_proposed_total > 0
+    assert spec.accept_rate == 1.0
+
+
+def test_paged_speculative_identity_and_hygiene(pcm):
+    cfg, params = pcm["cfg"], pcm["params"]
+    spec = _mk_spec(cfg, params, paged=True, block_size=4)
+    res = spec.serve(_reqs(cfg))
+    for a, b in zip(pcm["base_res"], res):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    _assert_conservation(spec, res)
+    # verify writes stayed inside the admission-time block reservation and
+    # the pool came back clean
+    spec.kv.check()
+    assert spec.kv.pool_g.num_owned == 0
+
+
+def test_cancel_mid_decode_partials_and_draft_hygiene(pcm):
+    spec = pcm["spec"]
+    snap = (spec.total_energy_pj, spec.idle_energy_pj)
+    reqs = _reqs(pcm["cfg"], lens=((8, 16), (8, 16)), base_seed=80)
+    rids = [spec.submit(r) for r in reqs]
+    results = []
+    for _ in range(16):
+        results += spec.step()
+        if any(len(s.generated) >= 3 for _, s in
+               spec.scheduler.active_slots()):
+            break
+    cancelled = spec.cancel(rids[0])
+    assert cancelled is not None
+    assert cancelled.done_reason == "cancelled"
+    assert 0 < len(cancelled.tokens) < reqs[0].max_new
+    results += [cancelled] + spec.drain()
+    pcm["spec_history"].extend(results)
+    # conservation holds with the cancelled partial: scenario-delta form
+    d_total = spec.total_energy_pj - snap[0]
+    d_idle = spec.idle_energy_pj - snap[1]
+    assert np.isclose(sum(r.energy_pj for r in results) + d_idle, d_total,
+                      rtol=1e-6)
+    # zero-on-retire covers the draft shadow cache too: no rejected-draft
+    # residue survives for a backfilled slot to attend
+    for blk in spec.draft_cache.values():
+        for arr in blk.values():
+            assert float(jnp.abs(arr).max()) == 0.0
+
+
+def test_guards():
+    cfg, params = _guard_cfg_params()
+    # sliding-window ring stacks are rejected: rejected-draft writes wrap
+    # onto still-visible history that is never rewritten
+    ring = get_config("gemma3-1b", smoke=True).replace(dtype=jnp.float32,
+                                                       num_layers=2)
+    assert "local" in ring.blocks() and ring.sliding_window
+    with pytest.raises(ValueError, match="all-global"):
+        SpeculativeEngine(ring, params, batch_size=2, max_len=32)
+    with pytest.raises(ValueError, match="spec_k"):
+        SpeculativeEngine(cfg, params, batch_size=2, max_len=32, spec_k=0)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        SpeculativeEngine(cfg, params, batch_size=2, max_len=32, paged=True,
+                          block_size=4, prefix_cache=True)
+    with pytest.raises(ValueError, match="chunked"):
+        SpeculativeEngine(cfg, params, batch_size=2, max_len=32,
+                          chunked_prefill=False)
+    eng = SpeculativeEngine(cfg, params, batch_size=2, max_len=32)
+    with pytest.raises(ValueError, match="greedy-only"):
+        eng.submit(GenRequest(prompt=np.arange(4, dtype=np.int32),
+                              max_new=4, temperature=0.7))
+
+
+def _guard_cfg_params():
+    cfg = _base_cfg(emt_mode="ideal")
+    return cfg, init_params(lm.specs(cfg), jax.random.PRNGKey(2))
