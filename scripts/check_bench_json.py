@@ -31,12 +31,23 @@ REQUIRED = {
         "shared_prefix",
         "poisson_load",
         "speculative",
+        "multihost",
     ],
     "BENCH_kernels.json": ["shape", "cases", "prefill_cases", "ratios"],
 }
 
 # loose-for-CI-noise regression bound on fused/gather_clamped at occ=100%
 FUSED_RATIO_BOUND = 1.25
+
+# multihost weak scaling: 4 simulated devices must reach >= 1.5x the
+# single-device decode throughput — but only when the host actually has
+# cores to run the per-device programs concurrently.  On a 1-core host the
+# XLA CPU client serializes the four per-shard programs, so wall-clock
+# weak scaling is physically capped near 1x; there the gate degrades to a
+# sanity floor (sharding must not collapse throughput).
+MULTIHOST_SPEEDUP_BOUND = 1.5
+MULTIHOST_SINGLE_CORE_FLOOR = 0.8
+MULTIHOST_BALANCE_BOUND = 0.5
 
 
 def check_poisson(path, poisson):
@@ -122,6 +133,75 @@ def check_speculative(path, spec):
             f"verify chunk stopped amortizing the static macro cost")
 
 
+def check_multihost(path, mh):
+    """Data-parallel serving section (bench_latency.py --multihost).  The
+    deterministic claims are gated hard: sharded runs must be token-identical
+    to the single-device baseline at temperature 0, every device count must
+    conserve energy including the per-shard ledger split, and 4-device
+    admission must stay occupancy-balanced.  The weak-scaling speedup is
+    gated at MULTIHOST_SPEEDUP_BOUND when the host has >= 2 cores (CI); on a
+    1-core host only the serialization sanity floor applies."""
+    import math
+
+    devices = mh.get("devices")
+    if not isinstance(devices, dict):
+        raise SystemExit(f"{path}: multihost missing devices map")
+    for n in ("1", "2", "4"):
+        d = devices.get(n)
+        if not isinstance(d, dict):
+            raise SystemExit(f"{path}: multihost missing devices[{n!r}]")
+        for field in ("decode_tok_per_s", "wall_s", "uj_per_token",
+                      "total_uj", "idle_uj", "ttft_ms", "inter_token_ms"):
+            v = d.get(field)
+            if isinstance(v, dict):
+                v = v.get("p50")
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v > 0):
+                raise SystemExit(f"{path}: multihost devices[{n!r}].{field} "
+                                 f"must be finite and positive, got {v!r}")
+        if d.get("n_shards") != int(n):
+            raise SystemExit(f"{path}: multihost devices[{n!r}] ran "
+                             f"{d.get('n_shards')!r} shards, expected {n}")
+        for field in ("shard_total_uj", "shard_idle_uj", "shard_occupancy"):
+            v = d.get(field)
+            if not (isinstance(v, list) and len(v) == int(n)):
+                raise SystemExit(f"{path}: multihost devices[{n!r}].{field} "
+                                 f"must have one entry per shard, got {v!r}")
+        for flag in ("energy_conserved_with_partials",
+                     "shard_split_conserved"):
+            if not d.get(flag, False):
+                raise SystemExit(f"{path}: multihost devices[{n!r}] broke "
+                                 f"{flag} — the per-shard energy ledger no "
+                                 f"longer re-sums to the engine totals")
+    for flag in ("token_identity_2v1", "token_identity_4v1"):
+        if not mh.get(flag, False):
+            raise SystemExit(f"{path}: multihost {flag} is false — sharded "
+                             f"decode changed tokens vs the single-device "
+                             f"baseline at temperature 0")
+    bal = devices["4"].get("occupancy_balance")
+    if not (isinstance(bal, (int, float)) and bal >= MULTIHOST_BALANCE_BOUND):
+        raise SystemExit(
+            f"{path}: multihost 4-device occupancy_balance {bal!r} < "
+            f"{MULTIHOST_BALANCE_BOUND} — slot-to-shard admission is "
+            f"starving a shard")
+    speedup = mh.get("speedup_tok_per_s_4v1")
+    if not (isinstance(speedup, (int, float)) and math.isfinite(speedup)):
+        raise SystemExit(f"{path}: multihost speedup_tok_per_s_4v1 missing "
+                         f"or non-finite: {speedup!r}")
+    host_cpus = mh.get("host_cpus", 1)
+    if host_cpus >= 2:
+        if speedup < MULTIHOST_SPEEDUP_BOUND:
+            raise SystemExit(
+                f"{path}: multihost 4-device decode speedup {speedup} < "
+                f"{MULTIHOST_SPEEDUP_BOUND} on a {host_cpus}-core host — "
+                f"data-parallel serving stopped weak-scaling")
+    elif speedup < MULTIHOST_SINGLE_CORE_FLOOR:
+        raise SystemExit(
+            f"{path}: multihost 4-device decode speedup {speedup} < "
+            f"serialization floor {MULTIHOST_SINGLE_CORE_FLOOR} on a 1-core "
+            f"host — sharding overhead collapsed throughput")
+
+
 def check(path):
     with open(path) as f:
         report = json.load(f)
@@ -139,6 +219,9 @@ def check(path):
     spec = report.get("speculative")
     if spec is not None:
         check_speculative(path, spec)
+    mh = report.get("multihost")
+    if mh is not None:
+        check_multihost(path, mh)
     if name == "BENCH_kernels.json":
         ratio = report["ratios"]["fused_vs_gather_clamped"]["occ100_max"]
         if ratio > FUSED_RATIO_BOUND:

@@ -50,6 +50,13 @@ Flags (new continuous-batching engine):
     --step-budget-uj B rolling per-engine admission bucket: the engine earns
                        B uJ of credit per step; admission head-blocks while
                        the bucket is overdrawn
+    --shards N         data-parallel serving over N devices (serve_2d mesh
+                       data axis): slots, paged block pools, and the KV cache
+                       are partitioned into N shard groups, admission picks
+                       the least-occupied shard, decode runs shard-locally.
+                       Needs N visible devices — simulate on CPU with
+                       XLA_FLAGS=--xla_force_host_platform_device_count=N
+                       (docs/serving.md "Multi-device serving")
     --rate R           streaming front-end mode: drive the engine through
                        repro.serve.server.StreamingServer with open-loop
                        Poisson arrivals at R req/s (replaces --stagger) and
@@ -196,6 +203,9 @@ def main():
                          "with done_reason='energy_budget')")
     ap.add_argument("--step-budget-uj", type=float, default=None,
                     help="per-engine rolling admission budget in uJ/step")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="data-parallel shard count over the serve_2d mesh "
+                         "data axis (needs that many visible devices)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="streaming front-end: open-loop Poisson arrival "
                          "rate in req/s (0 = synchronous --stagger driver)")
@@ -207,6 +217,19 @@ def main():
     if args.placement and args.device:
         ap.error("--placement and --device are mutually exclusive "
                  "(a placement names its corners per layer)")
+    if args.shards > 1:
+        if jax.device_count() < args.shards:
+            ap.error(
+                f"--shards {args.shards} needs {args.shards} visible devices "
+                f"but only {jax.device_count()} present — on CPU simulate "
+                f"them with XLA_FLAGS=--xla_force_host_platform_device_"
+                f"count={args.shards} (must be set before jax starts)")
+        if args.batch % args.shards:
+            ap.error(f"--batch {args.batch} must be divisible by "
+                     f"--shards {args.shards}")
+        if args.draft_placement:
+            ap.error("--draft-placement is single-device for now (the draft "
+                     "shadow cache and verify step are not sharded)")
 
     import jax.numpy as jnp
     if args.placement:
@@ -243,7 +266,8 @@ def main():
         num_ring_blocks=args.kv_ring_blocks,
         chunked_prefill=args.chunked_prefill,
         prefill_chunk=args.prefill_chunk,
-        prefix_cache=args.prefix_cache, controller=controller)
+        prefix_cache=args.prefix_cache, controller=controller,
+        n_shards=args.shards)
     if args.draft_placement:
         from repro.serve.speculative import SpeculativeEngine
         eng = SpeculativeEngine(cfg, params,
@@ -296,12 +320,24 @@ def main():
     if eng.chunked:
         line = f"prefill tokens computed: {eng.prefill_tokens_total}"
         if eng.prefix_cache:
+            parked = sum(p.num_cached for p in eng.kv.pools_g)
             line += (f", served from prefix cache: "
                      f"{eng.cached_prefix_tokens} "
-                     f"(hits {eng.kv.pool_g.hits}, "
-                     f"evictions {eng.kv.pool_g.evictions}, "
-                     f"{eng.kv.pool_g.num_cached} blocks parked)")
+                     f"(hits {eng.kv.prefix_hits}, "
+                     f"evictions {eng.kv.prefix_evictions}, "
+                     f"{parked} blocks parked)")
+            if eng.n_shards > 1:
+                line += (f", cross-shard misses "
+                         f"{eng.kv.cross_shard_prefix_misses}")
         print(line)
+    if eng.n_shards > 1:
+        occ = eng.shard_occupancy
+        bal = float(occ.min()) / max(float(occ.max()), 1.0)
+        s_uj = [round(float(v) * 1e-6, 3) for v in eng.shard_energy_pj]
+        s_idle = [round(float(v) * 1e-6, 3) for v in eng.shard_idle_energy_pj]
+        print(f"shards ({eng.n_shards} x batch {eng.shard_size}): "
+              f"occupancy {occ.tolist()} (balance {bal:.2f}), "
+              f"energy {s_uj} uJ, idle {s_idle} uJ")
     for r in results[:4]:
         per_tok = r.energy_pj * 1e-6 / max(len(r.tokens), 1)
         print(f"  req{r.rid}: {len(r.tokens)} toks, {per_tok:.4f} uJ/token, "

@@ -1,7 +1,9 @@
 from repro.serve.engine import (ServingEngine, GenRequest, GenResult,
                                 make_prefill_step, make_decode_step,
                                 make_serve_decode_step, make_paged_decode_step,
-                                serve_shardings, prefill_bucket)
+                                make_sharded_chunk_step,
+                                make_sharded_decode_step,
+                                serve_shardings, prefill_bucket, view_bucket)
 from repro.serve.kv_pool import BlockPool, PagedKV
 from repro.serve.scheduler import RejectedError, Scheduler, Slot
 from repro.serve.sampling import sample_tokens

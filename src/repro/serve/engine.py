@@ -93,7 +93,8 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -108,7 +109,8 @@ from repro.serve.scheduler import RejectedError, Scheduler, Slot
 __all__ = ["ServingEngine", "GenRequest", "GenResult", "RejectedError",
            "prefill_bucket", "view_bucket", "serve_shardings",
            "make_prefill_step", "make_decode_step", "make_serve_decode_step",
-           "make_chunk_step", "make_paged_decode_step"]
+           "make_chunk_step", "make_paged_decode_step",
+           "make_sharded_chunk_step", "make_sharded_decode_step"]
 
 
 def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh], rules=None):
@@ -338,6 +340,156 @@ def make_paged_zero(cfg: ModelConfig, page_lens: dict):
     return zero
 
 
+# --------------------------------------------------------------------------
+# Data-parallel (sharded) serving steps.
+#
+# The engine's sharded mode wraps the *same* per-shard step functions built
+# above (with mesh=None — no GSPMD constraints inside) in `shard_map` over
+# the mesh "data" axis: params replicated (P()), the cache tree + every
+# per-slot (B, ...) argument sharded on dim 0 (P("data")), the noise seed
+# replicated.  Each device therefore runs the whole model on its own
+# batch_size/n_shards slots against its own pool rows — the paged gathers
+# and scatters index *shard-local* block ids by construction, so no table
+# resolution ever becomes a cross-device collective (the GSPMD alternative,
+# sharding the pool dim of a gathered operand, would all-gather the pools).
+# Scalar aux leaves (energy_pj / corners / kv_reads) are lifted to (1,)
+# inside the shard, so the stacked output is a (n_shards,) per-shard vector:
+# the engine's per-shard energy/idle/corner ledgers come straight off the
+# step with no extra collective.
+# --------------------------------------------------------------------------
+
+
+def _shard_stack_aux(aux):
+    """Lift scalar aux leaves to (1, ...) so shard_map stacks them into
+    per-shard vectors under out_specs=P("data")."""
+    return jax.tree.map(lambda e: jnp.asarray(e)[None], aux)
+
+
+def make_sharded_chunk_step(cfg: ModelConfig, mesh: Mesh,
+                            page_lens: Optional[dict] = None):
+    """shard_map-SPMD mixed prefill+decode step (see block comment above):
+    same contract as make_chunk_step but aux leaves come back as (n_shards,)
+    per-shard vectors.  `view_len` stays jit-static (the compiled view width
+    is the max over the shards' buckets — SPMD programs share static
+    shapes); per-shard clamping happens in the *table values* the engine
+    stages (entries past a shard's own bucket resolve to the zero block)."""
+    base = make_chunk_step(cfg, None, None, page_lens)
+    paged = page_lens is not None
+    data, rep = PartitionSpec("data"), PartitionSpec()
+    in_specs = (rep, data, data, data, data, data, rep,
+                data, data, data, data, data) + ((data, data) if paged else ())
+    out_specs = (data, data, data)
+
+    def chunk_step(params, cache, tokens, start, ntok, active, seed,
+                   sample_seeds, sample_pos, temps, top_k, top_p,
+                   table_g=None, table_l=None, view_len=0):
+        def local(params, cache, tokens, start, ntok, active, seed,
+                  sample_seeds, sample_pos, temps, top_k, top_p, *tables):
+            kw = {"table_g": tables[0], "table_l": tables[1],
+                  "view_len": view_len} if paged else {}
+            next_tok, cache, aux = base(
+                params, cache, tokens, start, ntok, active, seed,
+                sample_seeds, sample_pos, temps, top_k, top_p, **kw)
+            return next_tok, cache, _shard_stack_aux(aux)
+
+        args = (params, cache, tokens, start, ntok, active, seed,
+                sample_seeds, sample_pos, temps, top_k, top_p)
+        if paged:
+            args += (table_g, table_l)
+        return shard_map(local, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(*args)
+
+    return chunk_step
+
+
+def make_sharded_decode_step(cfg: ModelConfig, mesh: Mesh,
+                             page_lens: Optional[dict] = None):
+    """shard_map-SPMD pure-decode step: make_paged_decode_step (paged) /
+    make_serve_decode_step (contiguous) per shard, aux stacked per shard."""
+    paged = page_lens is not None
+    base = make_paged_decode_step(cfg, None, None, page_lens) if paged \
+        else make_serve_decode_step(cfg, None, None)
+    data, rep = PartitionSpec("data"), PartitionSpec()
+    in_specs = (rep, data, data, data, data, rep, data, data, data, data,
+                data, data) + ((data, data) if paged else ())
+    out_specs = (data, data, data)
+
+    def decode_step(params, cache, tokens, index, active, seed,
+                    sample_seeds, sample_pos, temps, top_k, top_p, enc_lens,
+                    table_g=None, table_l=None, view_len=0):
+        def local(params, cache, tokens, index, active, seed,
+                  sample_seeds, sample_pos, temps, top_k, top_p, enc_lens,
+                  *tables):
+            if paged:
+                next_tok, cache, aux = base(
+                    params, cache, tokens, index, active, seed,
+                    sample_seeds, sample_pos, temps, top_k, top_p, enc_lens,
+                    tables[0], tables[1], view_len)
+            else:
+                next_tok, cache, aux = base(
+                    params, cache, tokens, index, active, seed,
+                    sample_seeds, sample_pos, temps, top_k, top_p, enc_lens)
+            return next_tok, cache, _shard_stack_aux(aux)
+
+        args = (params, cache, tokens, index, active, seed, sample_seeds,
+                sample_pos, temps, top_k, top_p, enc_lens)
+        if paged:
+            args += (table_g, table_l)
+        return shard_map(local, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(*args)
+
+    return decode_step
+
+
+def make_sharded_paged_zero(cfg: ModelConfig, mesh: Mesh, page_lens: dict):
+    """Per-shard zero-on-retire/evict: `(n_shards, W)` id grids + a
+    `(n_shards,)` slot vector, one row per shard — non-target shards carry
+    the out-of-bounds sentinels and their scatters drop."""
+    base = make_paged_zero(cfg, page_lens)
+    data = PartitionSpec("data")
+
+    def zero(big, ids_g, ids_l, slot):
+        def local(big, ids_g, ids_l, slot):
+            return base(big, ids_g[0], ids_l[0], slot[0])
+        return shard_map(local, mesh=mesh, in_specs=(data,) * 4,
+                         out_specs=data, check_rep=False)(
+                             big, ids_g, ids_l, slot)
+
+    return jax.jit(zero, donate_argnums=(0,))
+
+
+def make_sharded_slot_zero(mesh: Mesh):
+    """Contiguous-cache zero-on-retire per shard: `(n_shards,)` local slot
+    ids, sentinel (== shard batch size, out of bounds -> dropped) on the
+    shards that retire nothing this call."""
+    data = PartitionSpec("data")
+
+    def zero(big, slot):
+        def local(big, slot):
+            return jax.tree.map(
+                lambda b: b.at[slot[0]].set(0.0, mode="drop"), big)
+        return shard_map(local, mesh=mesh, in_specs=(data, data),
+                         out_specs=data, check_rep=False)(big, slot)
+
+    return jax.jit(zero, donate_argnums=(0,))
+
+
+def make_sharded_pool_copy(cfg: ModelConfig, mesh: Mesh):
+    """Per-shard prefix-cache COW copy: `(n_shards,)` src/dst id vectors;
+    non-target shards carry the out-of-bounds dst sentinel (update dropped —
+    jit scatter semantics — so their gathered src row never lands)."""
+    base = make_pool_copy(cfg)
+    data = PartitionSpec("data")
+
+    def copy(big, src, dst):
+        def local(big, src, dst):
+            return base(big, src[0], dst[0])
+        return shard_map(local, mesh=mesh, in_specs=(data,) * 3,
+                         out_specs=data, check_rep=False)(big, src, dst)
+
+    return jax.jit(copy, donate_argnums=(0,))
+
+
 def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
                     rules_name: str = "serve_2d"):
     """(param_shardings, cache_shardings, cache_specs) for the serving mesh."""
@@ -418,7 +570,7 @@ class ServingEngine:
                  prefill_chunk: int = 16, prefix_cache: bool = False,
                  max_pending: Optional[int] = None,
                  on_token: Optional[Callable[[int, int], None]] = None,
-                 controller=None):
+                 controller=None, n_shards: int = 1):
         if placement is not None:
             # heterogeneous device placement (EMTConfig or DevicePlacement):
             # overrides the config's EMT surface for this engine. Params must
@@ -430,6 +582,27 @@ class ServingEngine:
         self.max_len = max_len
         self.seed = seed
         self.fresh_noise = fresh_noise
+        # data-parallel serving: slots are partitioned into n_shards groups
+        # and every step runs as ONE shard_map SPMD program over the mesh
+        # "data" axis — each device owns its group's cache rows / pool blocks
+        # (see the sharded-step block comment above).  The mesh must carry a
+        # "data" axis of size n_shards (jax.sharding.Mesh over n_shards
+        # devices; CI simulates them with
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N).
+        self.n_shards = int(n_shards)
+        if self.n_shards < 1 or batch_size % self.n_shards:
+            raise ValueError(f"batch_size {batch_size} not divisible by "
+                             f"n_shards {n_shards}")
+        self.shard_size = batch_size // self.n_shards
+        if self.n_shards > 1:
+            if mesh is None:
+                from repro.launch.mesh import make_mesh
+                mesh = make_mesh(self.n_shards, 1)
+            if mesh.shape["data"] != self.n_shards:
+                raise ValueError(
+                    f"mesh data axis {mesh.shape['data']} != n_shards "
+                    f"{self.n_shards}")
+        self._mesh = mesh
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
         self._sample = jax.jit(sampling.sample_tokens)
         # chunked prefill (default for decoder-only attention stacks): prompts
@@ -446,8 +619,13 @@ class ServingEngine:
         if self.chunked and not can_chunk:
             raise ValueError("chunked_prefill requires a decoder-only "
                              "attention stack without mrope/embeds input")
+        if self.n_shards > 1 and not self.chunked:
+            raise ValueError("sharded serving (n_shards > 1) requires "
+                             "chunked prefill — the legacy bucketed prefill "
+                             "path scatters batch-1 caches across shards")
         self.prefill_chunk = int(prefill_chunk)
         assert self.prefill_chunk >= 1
+        sharded = self.n_shards > 1
         # paged mode only changes attention caches; pure-recurrent stacks
         # (mamba/xlstm) have nothing to page
         self.paged = bool(paged) and any(k in ATTN_KINDS for k in cfg.blocks())
@@ -463,36 +641,88 @@ class ServingEngine:
                 num_ring_blocks = batch_size * wl if ring_len else 0
             self.block_size = block_size
             self.kv = PagedKV(batch_size, max_len, block_size, num_blocks,
-                              ring_len, num_ring_blocks if ring_len else 0)
+                              ring_len, num_ring_blocks if ring_len else 0,
+                              n_shards=self.n_shards)
             self.page_lens = lens
-            self.cache = lm.init_paged_cache(
-                cfg, batch_size, max_len, block_size, num_blocks,
-                num_ring_blocks if ring_len else 0)
-            # view_len is static: one compile per power-of-two block bucket
-            self._decode = jax.jit(
-                make_paged_decode_step(cfg, mesh, rules, lens),
-                donate_argnums=(1,), static_argnames=("view_len",))
-            self._insert = jax.jit(make_paged_insert(cfg, block_size, lens),
-                                   donate_argnums=(0,))
-            self._zero_retired = jax.jit(make_paged_zero(cfg, lens),
-                                         donate_argnums=(0,))
-            if self.chunked:
-                self._chunk = jax.jit(make_chunk_step(cfg, mesh, rules, lens),
-                                      donate_argnums=(1,),
-                                      static_argnames=("view_len",))
+            if sharded:
+                # device pools hold n_shards * (per-shard blocks + 1 zero
+                # block) rows: shard s's rows are its own pool followed by
+                # its own zero row, so the (shard-local) gather sentinel
+                # kv.zero_block_g and scatter sentinel +1 work unchanged.
+                # init_paged_cache adds the one zero row itself, hence the
+                # "- 1"; every row starts zeroed, so the NamedSharding
+                # device_put is the only placement step needed.
+                npb = num_blocks // self.n_shards
+                dev_blocks = self.n_shards * (npb + 1) - 1
+                dev_ring = 0
+                if ring_len:
+                    nrb = num_ring_blocks // self.n_shards
+                    dev_ring = self.n_shards * (nrb + 1) - 1
+                self.cache = lm.init_paged_cache(
+                    cfg, batch_size, max_len, block_size, dev_blocks,
+                    dev_ring)
+                self.cache = jax.device_put(
+                    self.cache,
+                    NamedSharding(mesh, PartitionSpec("data")))
+                self._decode = jax.jit(
+                    make_sharded_decode_step(cfg, mesh, lens),
+                    donate_argnums=(1,), static_argnames=("view_len",))
+                self._chunk = jax.jit(
+                    make_sharded_chunk_step(cfg, mesh, lens),
+                    donate_argnums=(1,), static_argnames=("view_len",))
+                self._zero_retired = make_sharded_paged_zero(cfg, mesh, lens)
+                self._insert = None      # chunked admission never scatters
+            else:
+                self.cache = lm.init_paged_cache(
+                    cfg, batch_size, max_len, block_size, num_blocks,
+                    num_ring_blocks if ring_len else 0)
+                # view_len is static: one compile per power-of-two bucket
+                self._decode = jax.jit(
+                    make_paged_decode_step(cfg, mesh, rules, lens),
+                    donate_argnums=(1,), static_argnames=("view_len",))
+                self._insert = jax.jit(
+                    make_paged_insert(cfg, block_size, lens),
+                    donate_argnums=(0,))
+                self._zero_retired = jax.jit(make_paged_zero(cfg, lens),
+                                             donate_argnums=(0,))
+                if self.chunked:
+                    self._chunk = jax.jit(
+                        make_chunk_step(cfg, mesh, rules, lens),
+                        donate_argnums=(1,),
+                        static_argnames=("view_len",))
             self.scheduler = Scheduler(batch_size, kv=self.kv,
-                                       max_pending=max_pending)
+                                       max_pending=max_pending,
+                                       n_shards=self.n_shards)
         else:
             self.kv = None
-            self._decode = jax.jit(make_serve_decode_step(cfg, mesh, rules),
-                                   donate_argnums=(1,))
-            self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
-            self._zero_retired = jax.jit(self._zero_slot, donate_argnums=(0,))
-            if self.chunked:
-                self._chunk = jax.jit(make_chunk_step(cfg, mesh, rules),
-                                      donate_argnums=(1,))
-            self.scheduler = Scheduler(batch_size, max_pending=max_pending)
             self.cache = lm.init_cache(cfg, batch_size, max_len)
+            if sharded:
+                self.cache = jax.device_put(
+                    self.cache,
+                    NamedSharding(mesh, PartitionSpec("data")))
+                self._decode = jax.jit(make_sharded_decode_step(cfg, mesh),
+                                       donate_argnums=(1,))
+                self._chunk = jax.jit(make_sharded_chunk_step(cfg, mesh),
+                                      donate_argnums=(1,))
+                self._zero_retired = make_sharded_slot_zero(mesh)
+                self._insert = None
+            else:
+                self._decode = jax.jit(
+                    make_serve_decode_step(cfg, mesh, rules),
+                    donate_argnums=(1,))
+                self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+                self._zero_retired = jax.jit(self._zero_slot,
+                                             donate_argnums=(0,))
+                if self.chunked:
+                    self._chunk = jax.jit(make_chunk_step(cfg, mesh, rules),
+                                          donate_argnums=(1,))
+            self.scheduler = Scheduler(batch_size, max_pending=max_pending,
+                                       n_shards=self.n_shards)
+        if sharded:
+            # replicate params across the mesh once (weight noise is seeded,
+            # so every shard regenerates identical fluctuations per step)
+            self.params = jax.device_put(
+                self.params, NamedSharding(mesh, PartitionSpec()))
         # refcounted prefix caching: shared prompt-prefix blocks are reused
         # across requests (paged + chunked only; ring/recurrent/enc-dec state
         # cannot be shared across requests, so those stacks are refused)
@@ -505,7 +735,11 @@ class ServingEngine:
                 raise ValueError("prefix_cache requires an all-global "
                                  "attention stack (sliding-window ring K/V is "
                                  "positional and cannot be shared)")
-            self._pool_copy = jax.jit(make_pool_copy(cfg), donate_argnums=(0,))
+            if sharded:
+                self._pool_copy = make_sharded_pool_copy(cfg, mesh)
+            else:
+                self._pool_copy = jax.jit(make_pool_copy(cfg),
+                                          donate_argnums=(0,))
         # per-token streaming hook: called as on_token(rid, token) the moment
         # a slot's new token is sampled (inside step()/_chunk_advance, before
         # the request retires) — the async front-end points this at the
@@ -521,10 +755,23 @@ class ServingEngine:
         # per-corner energy totals (prefill + decode), keyed by the placement's
         # corner labels — sums to total_energy_pj by construction
         self.corner_energy_pj = {}
+        # per-shard ledgers (length n_shards; a single-shard engine keeps
+        # them too, as length-1 views of the same accounting): the sharded
+        # step returns each aux scalar as a per-shard vector, so the split
+        # is exact — sum(shard_energy_pj) == total_energy_pj and
+        # sum(shard_idle_energy_pj) == idle_energy_pj up to summation order.
+        self.shard_energy_pj = np.zeros(self.n_shards)
+        self.shard_idle_energy_pj = np.zeros(self.n_shards)
+        self.shard_corner_energy_pj = {}     # name -> (n_shards,) float64
+        self.shard_kv_reads = np.zeros(self.n_shards)
+        # occupancy integral: per-shard sum over steps of active slots —
+        # min/max over shards is the scheduler's balance metric
+        self.shard_occupancy = np.zeros(self.n_shards, np.int64)
         self._steps = 0              # global decode-step counter (noise clock)
         self.peak_concurrent = 0     # high-water mark of active slots
-        self._tables_dev = None      # (view_len, tables) on device (None = stale)
+        self._tables_dev = None      # (key, tables) on device (None = stale)
         self.view_len = 0            # last decode step's clamped logical view
+        self.shard_view_lens = [0] * self.n_shards   # per-shard view buckets
         # decode + chunk K/V cache elements actually read (mask-visible
         # positions of real lanes only — aux["kv_reads"]); padded/zero-block
         # gathers and chunk padding lanes (clamped duplicate qpos rows) are
@@ -535,10 +782,22 @@ class ServingEngine:
         self.prefill_tokens_total = 0
         self.cached_prefix_tokens = 0
 
+    def _shard_of(self, slot_id: int) -> int:
+        return slot_id // self.shard_size
+
     def _book_corners(self, corners):
         for name, c in corners.items():
+            # sharded steps return (n_shards,) per-shard vectors; the legacy
+            # paths (and prefill) return scalars, which land on shard 0
+            e = np.asarray(c["energy_pj"], np.float64).reshape(-1)
             self.corner_energy_pj[name] = (self.corner_energy_pj.get(name, 0.0)
-                                           + float(c["energy_pj"]))
+                                           + float(e.sum()))
+            arr = self.shard_corner_energy_pj.setdefault(
+                name, np.zeros(self.n_shards))
+            if e.size == self.n_shards:
+                arr += e
+            else:
+                arr[0] += float(e.sum())
 
     # -- jitted helpers ------------------------------------------------------
     @staticmethod
@@ -625,7 +884,8 @@ class ServingEngine:
             if not self.kv.fits(S, req.max_new):
                 raise ValueError(
                     f"request needs more KV blocks than the pool holds "
-                    f"({self.kv.pool_g.num_blocks} x {self.block_size})")
+                    f"({self.kv.pool_g.num_blocks} x {self.block_size}"
+                    + (" per shard)" if self.n_shards > 1 else ")"))
         return prompt
 
     def submit(self, req: GenRequest) -> int:
@@ -666,14 +926,15 @@ class ServingEngine:
         finished = []
         while self.scheduler.pending:
             rid, req = self.scheduler.peek_pending()
-            if not self.scheduler.can_admit(self._bucket_len(len(req.prompt)),
-                                            req.max_new):
+            shard = self.scheduler.pick_shard(
+                self._bucket_len(len(req.prompt)), req.max_new)
+            if shard is None:
                 break
             if self.controller is not None and \
                     not self.controller.may_admit(self):
                 break
             self.scheduler.pop_pending()
-            sid = self.scheduler.free_slot()
+            sid = self.scheduler.free_slot(shard)
             self._admit(sid, rid, req)
             done = self._maybe_retire(sid)
             if done is not None:
@@ -715,24 +976,28 @@ class ServingEngine:
             for i, s in active:
                 if self.scheduler.kv_ensure(i, s.pos):
                     self._tables_dev = None
-            extra, kwargs = self._paged_tables(1 + max(s.pos
-                                                       for _, s in active))
+            needs = [1] * self.n_shards
+            for i, s in active:
+                sh = self._shard_of(i)
+                needs[sh] = max(needs[sh], 1 + s.pos)
+            extra, kwargs = self._paged_tables(needs)
         step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
         next_tok, self.cache, eaux = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(index),
             jnp.asarray(act), jnp.uint32(step_seed), jnp.asarray(seeds),
             jnp.asarray(spos), jnp.asarray(temps), jnp.asarray(topk),
             jnp.asarray(topp), jnp.asarray(enc), *extra, **kwargs)
-        share = self._book_step(eaux, len(active))
+        share = self._book_step(eaux, active)
         next_tok = np.asarray(next_tok)
         for i, s in active:
-            s.energy_pj += share
+            s.energy_pj += float(share[self._shard_of(i)])
             s.steps += 1
             s.pos += 1
             t = int(next_tok[i])
             s.last_token = t
             s.generated.append(t)
             self._emit(s.rid, t)
+            self._register_decode_blocks(i, s)
             done = self._maybe_retire(i)
             if done is not None:
                 finished.append(done)
@@ -777,20 +1042,23 @@ class ServingEngine:
             for i, s in active:
                 if not s.prefilling and self.scheduler.kv_ensure(i, s.pos):
                     self._tables_dev = None
-            extra, kwargs = self._paged_tables(
-                int(max(start[i] + ntok[i] for i, _ in active)))
+            needs = [1] * self.n_shards
+            for i, _ in active:
+                sh = self._shard_of(i)
+                needs[sh] = max(needs[sh], int(start[i] + ntok[i]))
+            extra, kwargs = self._paged_tables(needs)
         step_seed = self.seed + self._steps + 1 if self.fresh_noise else self.seed
         next_tok, self.cache, eaux = self._chunk(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(start),
             jnp.asarray(ntok), jnp.asarray(act), jnp.uint32(step_seed),
             jnp.asarray(seeds), jnp.asarray(spos), jnp.asarray(temps),
             jnp.asarray(topk), jnp.asarray(topp), *extra, **kwargs)
-        share = self._book_step(eaux, len(active))
+        share = self._book_step(eaux, active)
         next_tok = np.asarray(next_tok)
         finished = []
         for i, s in active:
             if s.prefilling:
-                s.prefill_energy_pj += share
+                s.prefill_energy_pj += float(share[self._shard_of(i)])
                 s.pos += int(ntok[i])
                 self.prefill_tokens_total += int(ntok[i])
                 if self.paged and self.prefix_cache:
@@ -802,56 +1070,110 @@ class ServingEngine:
                     s.generated.append(t)
                     self._emit(s.rid, t)
             else:
-                s.energy_pj += share
+                s.energy_pj += float(share[self._shard_of(i)])
                 s.steps += 1
                 s.pos += 1
                 t = int(next_tok[i])
                 s.last_token = t
                 s.generated.append(t)
                 self._emit(s.rid, t)
+                self._register_decode_blocks(i, s)
             done = self._maybe_retire(i)
             if done is not None:
                 finished.append(done)
         return finished
 
-    def _paged_tables(self, need: int):
-        """Stage the width-clamped block tables on device for a step covering
-        `need` positions: zero any prefix-cache evictions first, clamp the
-        logical view to the block-rounded bucket of the furthest live write
-        position (masks, gathers, and the fused kernel walk view_len
-        positions instead of max_len), and re-upload only when the tables or
-        the bucket changed.  Returns (extra_args, kwargs) for the jitted
-        step; shared by the pure decode and mixed chunk paths."""
+    def _paged_tables(self, needs):
+        """Stage the width-clamped block tables on device for a step whose
+        per-shard write frontiers are `needs` (length n_shards): zero any
+        prefix-cache evictions first, clamp the logical view to the
+        block-rounded bucket of the furthest live write position (masks,
+        gathers, and the fused kernel walk view_len positions instead of
+        max_len), and re-upload only when the tables or a bucket changed.
+
+        Sharded: the jit-static view width is the *max* over the shards'
+        buckets (one SPMD program, one static shape) — but each shard's
+        table rows are clamped to its **own** bucket, entries past it
+        resolving to the zero block.  A long request on one shard therefore
+        never makes another shard gather real blocks past its own frontier;
+        the per-shard buckets are observable as `shard_view_lens`.
+
+        Returns (extra_args, kwargs) for the jitted step; shared by the pure
+        decode and mixed chunk paths."""
         self._zero_evicted()
-        vlen = view_bucket(need, self.block_size, self.max_len)
-        if self._tables_dev is None or self._tables_dev[0] != vlen:
+        buckets = tuple(view_bucket(n, self.block_size, self.max_len)
+                        for n in needs)
+        vlen = max(buckets)
+        key = (vlen, buckets)
+        if self._tables_dev is None or self._tables_dev[0] != key:
             tg, tl = self.kv.gather_tables()
             width = -(-vlen // self.block_size)
-            self._tables_dev = (vlen, jnp.asarray(tg[:, :width]),
-                                jnp.asarray(tl))
+            tg = tg[:, :width].copy()
+            if self.n_shards > 1:
+                for sh, b in enumerate(buckets):
+                    w = -(-b // self.block_size)
+                    lo = sh * self.shard_size
+                    tg[lo:lo + self.shard_size, w:] = self.kv.zero_block_g
+            self._tables_dev = (key, jnp.asarray(tg), jnp.asarray(tl))
         self.view_len = vlen
+        self.shard_view_lens = list(buckets)
         return self._tables_dev[1:], {"view_len": vlen}
 
-    def _book_step(self, eaux, n_active: int) -> float:
+    def _book_step(self, eaux, active) -> np.ndarray:
         """Book one jitted step's aux into the engine totals.  Returns the
-        per-active-slot energy share: every row issues the same crossbar
-        reads per step, so each active slot is billed e/B
-        (occupancy-independent) and the idle rows' share accrues to
-        idle_energy_pj — shared by the pure decode and mixed chunk paths."""
+        (n_shards,) per-active-slot energy shares: every row issues the same
+        crossbar reads per step, so an active slot is billed its *shard's*
+        energy over the shard's rows, e_s / (batch_size / n_shards)
+        (occupancy-independent), and the idle rows' share accrues to the
+        shard's slice of idle_energy_pj — shared by the pure decode and
+        mixed chunk paths.  Unsharded engines are the n_shards == 1 case of
+        the same arithmetic (e / batch_size, bit-identical to the historic
+        scalar path)."""
         self._steps += 1
-        self.kv_reads_total += float(eaux["kv_reads"])
-        e = float(eaux["energy_pj"])
+        kv = np.asarray(eaux["kv_reads"], np.float64).reshape(-1)
+        e = np.asarray(eaux["energy_pj"], np.float64).reshape(-1)
+        self.kv_reads_total += float(kv.sum())
+        self.shard_kv_reads += kv
         self._book_corners(eaux["corners"])
-        self.total_energy_pj += e
-        share = e / self.batch_size
-        self.idle_energy_pj += share * (self.batch_size - n_active)
+        self.total_energy_pj += float(e.sum())
+        self.shard_energy_pj += e
+        n_act = np.zeros(self.n_shards, np.int64)
+        for i, _ in active:
+            n_act[self._shard_of(i)] += 1
+        self.shard_occupancy += n_act
+        share = e / self.shard_size
+        idle_inc = share * (self.shard_size - n_act)
+        self.shard_idle_energy_pj += idle_inc
+        self.idle_energy_pj += float(idle_inc.sum())
         return share
+
+    def _register_decode_blocks(self, slot_id: int, s: Slot) -> None:
+        """Decode-block registration: when a decode step fills a block (the
+        slot's write frontier crosses a block boundary), extend the slot's
+        rolling-hash chain over its *written stream* — prompt ++ generated
+        tokens — and register the filled block in the prefix registry.  An
+        identical few-shot continuation (same prompt, same greedy
+        continuation, longer max_new) then admits against the decode-written
+        blocks with zero incremental prefill energy, exactly like a prompt
+        prefix hit."""
+        if not (self.paged and self.prefix_cache):
+            return
+        if s.pos % self.block_size:
+            return
+        # written positions are [0, pos): prompt, then every generated token
+        # except the newest (sampled this step, written next step)
+        stream = np.concatenate(
+            [s.prompt, np.asarray(s.generated[:-1], np.int32)])
+        self.kv.register_filled(slot_id, s.pos, stream=stream)
 
     def _zero_evicted(self):
         """Zero blocks the prefix cache evicted for reuse — their stale K/V
         must never be gatherable by the new owner (same hygiene as
         zero-on-retire for unregistered blocks)."""
         if not (self.paged and self.prefix_cache):
+            return
+        if self.n_shards > 1:
+            self._zero_evicted_sharded()
             return
         evicted = self.kv.pool_g.pop_evicted()
         if not evicted:
@@ -864,6 +1186,26 @@ class ServingEngine:
             self.cache = self._zero_retired(self.cache, jnp.asarray(ids),
                                             jnp.asarray(empty_l),
                                             jnp.int32(0))
+
+    def _zero_evicted_sharded(self):
+        """Sharded eviction hygiene: each shard zeroes its own evicted ids —
+        one (n_shards, width) grid per round, sentinel rows for shards with
+        nothing to zero (their scatters drop)."""
+        per_shard = self.kv.pop_evicted_g()
+        if not any(per_shard):
+            return
+        n, wg, wl = self.n_shards, self.kv.width_g, self.kv.width_l
+        rounds = max(-(-len(ids) // wg) for ids in per_shard if ids)
+        for r in range(rounds):
+            ids_g = np.full((n, wg), self.kv.zero_block_g + 1, np.int32)
+            for sh, ids in enumerate(per_shard):
+                chunk = ids[r * wg:(r + 1) * wg]
+                ids_g[sh, :len(chunk)] = chunk
+            ids_l = np.full((n, wl), self.kv.zero_block_l + 1, np.int32)
+            slot = np.full(n, self.shard_size, np.int32)   # OOB -> dropped
+            self.cache = self._zero_retired(self.cache, jnp.asarray(ids_g),
+                                            jnp.asarray(ids_l),
+                                            jnp.asarray(slot))
 
     def _emit(self, rid: int, token: int) -> None:
         if self.on_token is not None:
@@ -979,8 +1321,17 @@ class ServingEngine:
                     self._zero_evicted()
                     if res["cow"] is not None:
                         src, dst = res["cow"]
-                        self.cache = self._pool_copy(
-                            self.cache, jnp.int32(src), jnp.int32(dst))
+                        if self.n_shards > 1:
+                            sh = self._shard_of(slot_id)
+                            sv = np.zeros(self.n_shards, np.int32)
+                            dv = np.full(self.n_shards,
+                                         self.kv.zero_block_g + 1, np.int32)
+                            sv[sh], dv[sh] = src, dst
+                            self.cache = self._pool_copy(
+                                self.cache, jnp.asarray(sv), jnp.asarray(dv))
+                        else:
+                            self.cache = self._pool_copy(
+                                self.cache, jnp.int32(src), jnp.int32(dst))
                     pos = res["cached_len"]
                     self.cached_prefix_tokens += pos
                 else:
@@ -1053,13 +1404,37 @@ class ServingEngine:
         if self.paged:
             freed_g, freed_l = self.scheduler.kv_release(slot_id)
             self._tables_dev = None
-            ids_g = self._pad_ids(freed_g, self.kv.width_g,
-                                  self.kv.zero_block_g + 1)
-            ids_l = self._pad_ids(freed_l, self.kv.width_l,
-                                  self.kv.zero_block_l + 1)
-            self.cache = self._zero_retired(self.cache, jnp.asarray(ids_g),
-                                            jnp.asarray(ids_l),
-                                            jnp.int32(slot_id))
+            if self.n_shards > 1:
+                # one (n_shards, W) grid: the retiring slot's shard row holds
+                # its freed local ids + local slot index, every other shard's
+                # row is all sentinels (scatters drop)
+                sh = self._shard_of(slot_id)
+                n = self.n_shards
+                ids_g = np.full((n, self.kv.width_g),
+                                self.kv.zero_block_g + 1, np.int32)
+                ids_g[sh, :len(freed_g)] = freed_g
+                ids_l = np.full((n, self.kv.width_l),
+                                self.kv.zero_block_l + 1, np.int32)
+                ids_l[sh, :len(freed_l)] = freed_l
+                slot_v = np.full(n, self.shard_size, np.int32)
+                slot_v[sh] = slot_id - sh * self.shard_size
+                self.cache = self._zero_retired(
+                    self.cache, jnp.asarray(ids_g), jnp.asarray(ids_l),
+                    jnp.asarray(slot_v))
+            else:
+                ids_g = self._pad_ids(freed_g, self.kv.width_g,
+                                      self.kv.zero_block_g + 1)
+                ids_l = self._pad_ids(freed_l, self.kv.width_l,
+                                      self.kv.zero_block_l + 1)
+                self.cache = self._zero_retired(self.cache,
+                                                jnp.asarray(ids_g),
+                                                jnp.asarray(ids_l),
+                                                jnp.int32(slot_id))
+        elif self.n_shards > 1:
+            sh = self._shard_of(slot_id)
+            slot_v = np.full(self.n_shards, self.shard_size, np.int32)
+            slot_v[sh] = slot_id - sh * self.shard_size
+            self.cache = self._zero_retired(self.cache, jnp.asarray(slot_v))
         else:
             self.cache = self._zero_retired(self.cache, jnp.int32(slot_id))
         return GenResult(

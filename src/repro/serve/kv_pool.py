@@ -329,24 +329,81 @@ class PagedKV:
     Prefix caching operates on the **global** pool only (ring content is a
     positional window of the request's own stream and recurrent state cannot
     be shared — the engine refuses ``prefix_cache=True`` for such stacks).
+
+    Data-parallel serving (``n_shards > 1``)
+    ----------------------------------------
+    The slot range is partitioned into ``n_shards`` contiguous groups of
+    ``batch_size // n_shards`` slots, and each group gets its **own**
+    BlockPool(s) of ``num_blocks // n_shards`` blocks.  Table entries store
+    ids *local to the slot's shard pool* — on device each shard holds only
+    its own pool rows (plus its own zero block), so every gather/scatter the
+    block table drives resolves shard-locally and the sharded decode step
+    never needs a cross-device collective.  Free lists, refcounts, and the
+    prefix registry are per shard: a prefix-cache lookup only sees chains
+    registered in the *same* shard's pool; a prompt that would have hit a
+    chain resident on a different shard counts into
+    ``cross_shard_prefix_misses`` instead (locality observability for the
+    scheduler's shard-assignment policy).  ``n_shards == 1`` (the default)
+    is exactly the old single-pool behavior.
     """
 
     def __init__(self, batch_size: int, max_len: int, block_size: int,
-                 num_blocks: int, ring_len: int = 0, num_ring_blocks: int = 0):
+                 num_blocks: int, ring_len: int = 0, num_ring_blocks: int = 0,
+                 n_shards: int = 1):
+        assert n_shards >= 1 and batch_size % n_shards == 0, \
+            f"batch_size {batch_size} not divisible by n_shards {n_shards}"
+        assert num_blocks % n_shards == 0, \
+            f"num_blocks {num_blocks} not divisible by n_shards {n_shards}"
         self.batch_size = batch_size
         self.max_len = max_len
         self.block_size = block_size
         self.ring_len = ring_len
-        self.pool_g = BlockPool(num_blocks, block_size)
-        self.pool_l = BlockPool(num_ring_blocks, block_size) if ring_len else None
-        self.width_g = self.pool_g.blocks_for(max_len)
-        self.width_l = self.pool_g.blocks_for(ring_len) if ring_len else 1
+        self.n_shards = n_shards
+        self.shard_size = batch_size // n_shards
+        self.pools_g = [BlockPool(num_blocks // n_shards, block_size)
+                        for _ in range(n_shards)]
+        if ring_len:
+            assert num_ring_blocks % n_shards == 0, \
+                (f"num_ring_blocks {num_ring_blocks} not divisible by "
+                 f"n_shards {n_shards}")
+            self.pools_l = [BlockPool(num_ring_blocks // n_shards, block_size)
+                            for _ in range(n_shards)]
+        else:
+            self.pools_l = None
+        self.width_g = self.pools_g[0].blocks_for(max_len)
+        self.width_l = self.pools_g[0].blocks_for(ring_len) if ring_len else 1
         self.table_g = np.full((batch_size, self.width_g), -1, np.int64)
         self.table_l = np.full((batch_size, self.width_l), -1, np.int64)
+        # prompts that broke their hash walk on a chain resident in a
+        # *different* shard's registry (would have hit with co-located
+        # scheduling; see class docstring)
+        self.cross_shard_prefix_misses = 0
         # per-slot prefix bookkeeping: the hash chain of the slot's full
-        # prompt blocks + the prompt tokens behind it (register_filled)
+        # written-stream blocks + the tokens behind it (register_filled)
         self._chains: Dict[int, List[bytes]] = {}
         self._chain_tokens: Dict[int, np.ndarray] = {}
+
+    # -- shard routing -------------------------------------------------------
+    def shard_of(self, slot: int) -> int:
+        return slot // self.shard_size
+
+    @property
+    def pool_g(self) -> BlockPool:
+        """The slot-shard-0 global pool (the *only* pool when n_shards == 1;
+        sharded callers iterate ``pools_g``)."""
+        return self.pools_g[0]
+
+    @property
+    def pool_l(self) -> Optional[BlockPool]:
+        return self.pools_l[0] if self.pools_l is not None else None
+
+    @property
+    def prefix_hits(self) -> int:
+        return sum(p.hits for p in self.pools_g)
+
+    @property
+    def prefix_evictions(self) -> int:
+        return sum(p.evictions for p in self.pools_g)
 
     # -- admission sizing ----------------------------------------------------
     def needs(self, prompt_len: int, max_new: int) -> Tuple[int, int, int]:
@@ -363,32 +420,41 @@ class PagedKV:
         return ga, gr, la
 
     def fits(self, prompt_len: int, max_new: int) -> bool:
-        """Whether the request could ever be admitted on an empty pool."""
+        """Whether the request could ever be admitted on an empty pool
+        (sharded: on one shard's empty pool — a request never spans pools)."""
         ga, gr, la = self.needs(prompt_len, max_new)
         ok = self.pool_g.num_blocks >= ga + gr
         if self.pool_l is not None:
             ok = ok and self.pool_l.num_blocks >= la
         return ok
 
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+    def can_admit(self, prompt_len: int, max_new: int,
+                  shard: Optional[int] = None) -> bool:
+        """Block budget check: against `shard`'s pools, or any shard's."""
         ga, gr, la = self.needs(prompt_len, max_new)
-        ok = self.pool_g.can(ga + gr)
-        if self.pool_l is not None:
-            ok = ok and self.pool_l.can(la)
-        return ok
+        shards = range(self.n_shards) if shard is None else (shard,)
+        for s in shards:
+            ok = self.pools_g[s].can(ga + gr)
+            if self.pools_l is not None:
+                ok = ok and self.pools_l[s].can(la)
+            if ok:
+                return True
+        return False
 
     # -- lifecycle -----------------------------------------------------------
     def admit(self, slot: int, prompt_len: int, max_new: int) -> bool:
-        """Allocate prompt blocks + decode reservation for `slot`. All-or-
-        nothing: a refusal leaves pools and tables untouched."""
+        """Allocate prompt blocks + decode reservation for `slot` from its
+        shard's pools (table entries are shard-local ids). All-or-nothing: a
+        refusal leaves pools and tables untouched."""
+        sh = self.shard_of(slot)
         ga, gr, la = self.needs(prompt_len, max_new)
-        ids_g = self.pool_g.alloc(slot, ga, reserve=gr)
+        ids_g = self.pools_g[sh].alloc(slot, ga, reserve=gr)
         if ids_g is None:
             return False
-        if self.pool_l is not None:
-            ids_l = self.pool_l.alloc(slot, la)
+        if self.pools_l is not None:
+            ids_l = self.pools_l[sh].alloc(slot, la)
             if ids_l is None:
-                self.pool_g.free(slot)
+                self.pools_g[sh].free(slot)
                 return False
             self.table_l[slot, :la] = ids_l
         self.table_g[slot, :ga] = ids_g
@@ -403,12 +469,18 @@ class PagedKV:
         copy-on-write.  At least one prompt position is always left to
         recompute — the last prompt token's logits seed sampling.
 
+        Sharded: the walk only sees the *slot's own shard's* registry (device
+        pools hold no other shard's rows).  A walk that breaks on a key whose
+        chain is resident in a different shard's registry increments
+        ``cross_shard_prefix_misses``.
+
         Returns ``None`` on refusal (pools untouched) or a dict with
         ``cached_len`` (prompt positions served from cache) and ``cow``
         (``(src, dst)`` block ids to device-copy, or ``None``).  The caller
-        must zero ``pool_g.pop_evicted()`` blocks and perform the COW copy
+        must zero ``pop_evicted()`` blocks and perform the COW copy
         before the slot's first step.
         """
+        pool = self.pools_g[self.shard_of(slot)]
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         bs = self.block_size
         n = len(prompt)
@@ -419,9 +491,14 @@ class PagedKV:
         for i, key in enumerate(keys):
             if (i + 1) * bs > max_cached:
                 break
-            bid = self.pool_g.lookup(key)
+            bid = pool.lookup(key)
             if bid is None or not np.array_equal(
-                    self.pool_g.key_tokens(key), prompt[i * bs:(i + 1) * bs]):
+                    pool.key_tokens(key), prompt[i * bs:(i + 1) * bs]):
+                if any(p is not pool and p.lookup(key) is not None
+                       and np.array_equal(p.key_tokens(key),
+                                          prompt[i * bs:(i + 1) * bs])
+                       for p in self.pools_g):
+                    self.cross_shard_prefix_misses += 1
                 break
             hits.append(bid)
             parent = key
@@ -432,28 +509,28 @@ class PagedKV:
         cap = min(max_cached - k * bs, bs, n - k * bs)
         if cap > 0:
             tail = prompt[k * bs:k * bs + cap]
-            for ck in self.pool_g.children(parent):
-                ctoks = self.pool_g.key_tokens(ck)
+            for ck in pool.children(parent):
+                ctoks = pool.key_tokens(ck)
                 mm = int(np.argmin(np.concatenate(
                     [ctoks[:len(tail)] == tail, [False]])))
                 if mm > m:
-                    m, cow_src = mm, self.pool_g.lookup(ck)
+                    m, cow_src = mm, pool.lookup(ck)
 
         ga, gr, _ = self.needs(n, max_new)
         fresh = ga - k
-        if not self.pool_g.can(fresh + gr):
+        if not pool.can(fresh + gr):
             return None
         for bid in hits:
-            self.pool_g.acquire(slot, bid)
+            pool.acquire(slot, bid)
         avoid = (cow_src,) if cow_src is not None else ()
-        ids = self.pool_g.alloc(slot, fresh, reserve=gr, extend=True,
-                                avoid=avoid)
+        ids = pool.alloc(slot, fresh, reserve=gr, extend=True,
+                         avoid=avoid)
         if ids is None and cow_src is not None:
             # the only evictable block was the donor: forgo the COW reuse
             cow_src, m = None, 0
-            ids = self.pool_g.alloc(slot, fresh, reserve=gr, extend=True)
+            ids = pool.alloc(slot, fresh, reserve=gr, extend=True)
         if ids is None:
-            self.pool_g.free(slot)
+            pool.free(slot)
             return None
         self.table_g[slot, :k] = hits
         self.table_g[slot, k:ga] = ids
@@ -463,21 +540,40 @@ class PagedKV:
         return {"cached_len": cached_len,
                 "cow": (cow_src, ids[0]) if cow_src is not None else None}
 
-    def register_filled(self, slot: int, filled: int) -> None:
-        """Register the slot's fully-written prompt blocks (prefill frontier
-        at `filled` tokens) so later admissions can share them."""
+    def register_filled(self, slot: int, filled: int, stream=None) -> None:
+        """Register the slot's fully-written blocks (write frontier at
+        `filled` tokens) so later admissions can share them.
+
+        With `stream=None` this covers the prompt blocks as prefill advances
+        (the hash chain was computed at admission).  Decode-block
+        registration passes the full written stream — ``prompt ++ generated``
+        up to the frontier — and the chain is *extended* past the prompt with
+        the generated tokens' rolling hashes, so an identical few-shot
+        continuation (same prompt, same greedy continuation) later admits
+        against the decode-written blocks too."""
         keys = self._chains.get(slot)
-        if not keys:
+        if keys is None:
             return
-        prompt = self._chain_tokens[slot]
         bs = self.block_size
+        if stream is not None:
+            stream = np.asarray(stream, np.int32).reshape(-1)
+            assert len(stream) >= filled, "stream shorter than write frontier"
+            tokens = stream
+            self._chain_tokens[slot] = stream
+            while (len(keys) + 1) * bs <= len(stream):
+                i = len(keys)
+                keys.append(prefix_key(keys[-1] if keys else None,
+                                       stream[i * bs:(i + 1) * bs]))
+        else:
+            tokens = self._chain_tokens[slot]
+        pool = self.pools_g[self.shard_of(slot)]
         for i in range(min(filled // bs, len(keys))):
             bid = int(self.table_g[slot, i])
-            if self.pool_g.key_of(bid) is not None:
+            if pool.key_of(bid) is not None:
                 continue                        # hit or already registered
-            self.pool_g.register(
+            pool.register(
                 bid, keys[i], keys[i - 1] if i else None,
-                prompt[i * bs:(i + 1) * bs])
+                tokens[i * bs:(i + 1) * bs])
 
     def ensure(self, slot: int, pos: int) -> bool:
         """Make position `pos` writable for `slot`, appending a reserved block
@@ -486,15 +582,16 @@ class PagedKV:
         if self.table_g[slot, j] >= 0:
             return False
         assert (self.table_g[slot, :j] >= 0).all(), "non-contiguous block table"
-        self.table_g[slot, j] = self.pool_g.append(slot)
+        self.table_g[slot, j] = self.pools_g[self.shard_of(slot)].append(slot)
         return True
 
     def release(self, slot: int) -> Tuple[List[int], List[int]]:
         """Drop `slot`'s block references and clear its table rows.  Returns
         the (global, ring) ids that became blank — the engine zeroes those;
         shared / prefix-cached blocks survive with their content."""
-        g = self.pool_g.free(slot)
-        l = self.pool_l.free(slot) if self.pool_l is not None else []
+        sh = self.shard_of(slot)
+        g = self.pools_g[sh].free(slot)
+        l = self.pools_l[sh].free(slot) if self.pools_l is not None else []
         self.table_g[slot] = -1
         self.table_l[slot] = -1
         self._chains.pop(slot, None)
@@ -502,6 +599,8 @@ class PagedKV:
         return g, l
 
     # -- device views --------------------------------------------------------
+    # zero/sentinel ids are *shard-local* and identical on every shard (all
+    # pools are the same size), so the device views below need no shard logic
     @property
     def zero_block_g(self) -> int:
         return self.pool_g.num_blocks
@@ -527,7 +626,20 @@ class PagedKV:
                       self.zero_block_l + 1).astype(np.int32)
         return rg, rl
 
+    def pop_evicted_g(self) -> List[List[int]]:
+        """Per-shard lists of global-pool ids evicted since the last call."""
+        return [p.pop_evicted() for p in self.pools_g]
+
     def check(self) -> None:
-        self.pool_g.check()
-        if self.pool_l is not None:
-            self.pool_l.check()
+        for p in self.pools_g:
+            p.check()
+        if self.pools_l is not None:
+            for p in self.pools_l:
+                p.check()
+        # table entries must name blocks owned by the slot in its own shard's
+        # pool — a cross-shard id would gather another request's K/V rows
+        for slot in range(self.batch_size):
+            ids = self.table_g[slot][self.table_g[slot] >= 0]
+            owned = set(self.pools_g[self.shard_of(slot)].owned(slot))
+            assert set(int(b) for b in ids) <= owned, \
+                f"slot {slot} table names blocks outside its shard pool"

@@ -68,11 +68,29 @@ class Slot:
 
 
 class Scheduler:
-    """FIFO admission queue + slot table (+ optional paged-KV block tables)."""
+    """FIFO admission queue + slot table (+ optional paged-KV block tables).
+
+    Data-parallel serving (``n_shards > 1``): the slot range is partitioned
+    into ``n_shards`` contiguous groups of ``batch_size // n_shards`` slots —
+    shard ``s`` owns slots ``[s*g, (s+1)*g)`` — matching the engine's
+    batch-dim ``NamedSharding`` so a slot's cache rows and (paged) pool
+    blocks live on exactly one device.  Admission picks the *least-occupied
+    eligible* shard (free slot + that shard's block budget), lowest shard id
+    breaking ties, so no shard idles while another queues; backfill after a
+    retirement is shard-local by construction (the freed slot stays in its
+    group).  FIFO order is preserved: requests are still admitted strictly in
+    submission order, only the slot each one lands on changes.
+    """
 
     def __init__(self, batch_size: int, kv: Optional[PagedKV] = None,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None, n_shards: int = 1):
+        assert n_shards >= 1 and batch_size % n_shards == 0, \
+            f"batch_size {batch_size} not divisible by n_shards {n_shards}"
+        if kv is not None:
+            assert kv.n_shards == n_shards, "scheduler/kv shard count mismatch"
         self.batch_size = batch_size
+        self.n_shards = n_shards
+        self.shard_size = batch_size // n_shards
         self.kv = kv
         self.max_pending = max_pending       # None = unbounded FIFO
         self.queue: deque = deque()          # (rid, req) awaiting a slot
@@ -110,19 +128,44 @@ class Scheduler:
         return None
 
     # -- slots ---------------------------------------------------------------
-    def free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s is None:
+    def shard_of(self, slot_id: int) -> int:
+        return slot_id // self.shard_size
+
+    def free_slot(self, shard: Optional[int] = None) -> Optional[int]:
+        """First free slot — within `shard`'s group when given."""
+        lo = 0 if shard is None else shard * self.shard_size
+        hi = self.batch_size if shard is None else lo + self.shard_size
+        for i in range(lo, hi):
+            if self.slots[i] is None:
                 return i
         return None
 
+    def shard_active(self, shard: int) -> int:
+        """Occupied slots in `shard`'s group."""
+        lo = shard * self.shard_size
+        return sum(s is not None
+                   for s in self.slots[lo:lo + self.shard_size])
+
+    def pick_shard(self, prompt_len: int, max_new: int) -> Optional[int]:
+        """Admission target: the least-occupied shard with a free slot whose
+        (paged) block budget covers the request; lowest shard id breaks ties.
+        None when no shard is eligible.  With n_shards == 1 this is exactly
+        the old can_admit condition (shard 0 or None)."""
+        best = None
+        for sh in range(self.n_shards):
+            if self.free_slot(sh) is None:
+                continue
+            if self.kv is not None and \
+                    not self.kv.can_admit(prompt_len, max_new, shard=sh):
+                continue
+            occ = self.shard_active(sh)
+            if best is None or occ < best[0]:
+                best = (occ, sh)
+        return None if best is None else best[1]
+
     def can_admit(self, prompt_len: int, max_new: int) -> bool:
-        """A slot is free and (paged) the block budget covers the request."""
-        if self.free_slot() is None:
-            return False
-        if self.kv is None:
-            return True
-        return self.kv.can_admit(prompt_len, max_new)
+        """Some shard has a free slot and (paged) the block budget."""
+        return self.pick_shard(prompt_len, max_new) is not None
 
     def place(self, slot_id: int, slot: Slot) -> None:
         assert self.slots[slot_id] is None, f"slot {slot_id} occupied"

@@ -85,6 +85,10 @@ class SpeculativeEngine(ServingEngine):
                  spec_k: int = 4, draft_params=None, **kw):
         super().__init__(cfg, params, batch_size, max_len, mesh=mesh,
                          rules=rules, **kw)
+        if self.n_shards > 1:
+            raise ValueError("speculative decoding is not sharded yet: the "
+                             "draft shadow cache and verify step are single-"
+                             "device (n_shards must be 1)")
         if not self.chunked:
             raise ValueError("speculative decoding requires chunked prefill "
                              "(the verify primitive is the chunk step)")
@@ -164,14 +168,19 @@ class SpeculativeEngine(ServingEngine):
         target step."""
         self._steps += 1
         self.draft_steps += 1
-        self.kv_reads_total += float(eaux["kv_reads"])
+        kv = float(eaux["kv_reads"])
+        self.kv_reads_total += kv
+        self.shard_kv_reads[0] += kv
         e = float(eaux["energy_pj"])
         self._book_corners(eaux["corners"])
         self.total_energy_pj += e
+        self.shard_energy_pj[0] += e
         self.draft_total_energy_pj += e
+        self.shard_occupancy[0] += len(rows)
         share = e / self.batch_size
         idle = share * (self.batch_size - len(rows))
         self.idle_energy_pj += idle
+        self.shard_idle_energy_pj[0] += idle
         self.draft_idle_energy_pj += idle
         for i in rows:
             s = self.scheduler.slots[i]
@@ -315,14 +324,14 @@ class SpeculativeEngine(ServingEngine):
                     if self.scheduler.kv_ensure(i, p):
                         self._tables_dev = None
             extra, kwargs = self._paged_tables(
-                int(max(start[i] + ntok[i] for i, _ in active)))
+                [int(max(start[i] + ntok[i] for i, _ in active))])
         step_seed = self.seed + self._steps + 1 if self.fresh_noise \
             else self.seed
         greedy, self.cache, eaux = self._verify(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(start),
             jnp.asarray(ntok), jnp.asarray(act), jnp.uint32(step_seed),
             *extra, **kwargs)
-        share = self._book_step(eaux, len(active))
+        share = float(self._book_step(eaux, active)[0])
         greedy = np.asarray(greedy)              # (B, C) per-lane target argmax
 
         # ---- host-side acceptance + commit

@@ -176,6 +176,48 @@ def test_cache_hit_prefix_bills_zero_incremental_cost():
     assert res.prefill_energy_pj > 0
 
 
+def test_decode_written_blocks_register_and_serve_continuation():
+    """Decode-block registration: blocks filled *during decode* enter the
+    prefix registry under the written stream's rolling hashes, so replaying
+    the conversation (prompt ++ greedy continuation) admits against them —
+    the shared blocks bill zero incremental prefill tokens/energy."""
+    cfg = _cfg("analog")
+    params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    eng = _engine(cfg, params, True)
+
+    # prompt (6) + 6 written decode tokens = 12 = 3 full blocks; the last
+    # two blocks are filled by decode writes, not prefill
+    (first,) = eng.serve([GenRequest(prompt=prompt, max_new=7, seed=0)])
+    assert eng.cached_prefix_tokens == 0
+    base_cached = eng.cached_prefix_tokens
+    base_tokens = eng.prefill_tokens_total
+    base_uj = eng.total_energy_pj
+
+    # the few-shot continuation: the same conversation replayed as a prompt
+    cont = np.concatenate([prompt, np.asarray(first.tokens, np.int32)])
+    assert len(cont) == 13
+    (second,) = eng.serve([GenRequest(prompt=cont, max_new=3, seed=1)])
+    # all 3 full blocks hit — including the 2 decode-written ones — leaving
+    # only the final prompt token to prefill
+    assert eng.cached_prefix_tokens - base_cached == 3 * BLOCK
+    assert eng.prefill_tokens_total - base_tokens == 1
+    warm_uj = eng.total_energy_pj - base_uj
+    assert 0 < warm_uj < base_uj
+    eng.kv.check()
+
+    # token identity: the continuation matches a cache-off engine bit-exactly
+    ref = _engine(cfg, params, False)
+    want = ref.serve([GenRequest(prompt=cont, max_new=3, seed=1)])
+    np.testing.assert_array_equal(second.tokens, want[0].tokens)
+
+    # a *repeated* continuation is free again (registration survives churn)
+    mid_tokens = eng.prefill_tokens_total
+    eng.serve([GenRequest(prompt=cont, max_new=3, seed=1)])
+    assert eng.prefill_tokens_total - mid_tokens == 1
+
+
 def test_refcount_conservation_under_churn():
     """Randomized serve churn over a tight pool: conservation after every
     drain, shared blocks never freed while referenced, no leak at the end."""
