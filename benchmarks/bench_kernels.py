@@ -265,6 +265,10 @@ def bench_prefill_case(*, B, KV, G, hd, max_len, block_size, occupancy,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--arch", default=None,
+                    help="derive --kv-heads/--group/--head-dim from this "
+                         "arch's ServeSpec-built config instead of the "
+                         "explicit shape flags (the serving-shape sweep)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--kv-heads", type=int, default=4)
     ap.add_argument("--group", type=int, default=2)
@@ -274,6 +278,14 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="shrink the sweep for the CI bench-smoke job")
     args = ap.parse_args()
+    if args.arch:
+        from repro.serve.spec import ServeSpec
+        cfg = ServeSpec(arch=args.arch, smoke=args.smoke).build_config()
+        args.kv_heads = cfg.num_kv_heads
+        args.group = cfg.num_heads // cfg.num_kv_heads
+        args.head_dim = cfg.head_dim
+        print(f"shape from {args.arch}: KV={args.kv_heads} G={args.group} "
+              f"hd={args.head_dim}")
     if args.smoke:
         args.batch = min(args.batch, 4)
         args.max_len = min(args.max_len, 128)
@@ -333,7 +345,8 @@ def main():
     report = {
         "shape": {"B": args.batch, "KV": args.kv_heads, "G": args.group,
                   "hd": args.head_dim, "max_len": args.max_len,
-                  "dtype": "float32", "smoke": bool(args.smoke)},
+                  "dtype": "float32", "smoke": bool(args.smoke),
+                  "arch": args.arch},
         "note": ("decode variants all include the step's cache write; "
                  "fused/kernel impls timed on the jnp reference rung (CPU "
                  "production shape); the pallas rungs write + read block "

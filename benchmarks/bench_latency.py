@@ -49,15 +49,14 @@ import time
 from collections import Counter
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.models import lm
 from repro.nn.param import init_params
-from repro.serve.engine import ServingEngine, GenRequest, view_bucket
+from repro.serve.engine import GenRequest, view_bucket
 from repro.serve.scheduler import RejectedError
 from repro.serve.server import StreamingServer
+from repro.serve.spec import ServeSpec
 
 
 def _pct_ms(xs):
@@ -127,28 +126,18 @@ def _warmup(eng, cfg, rng, prompt_lo, prompt_hi, max_new, batch):
             seed += 1
         eng.step()
     eng.drain()
-    eng._steps = 0
-    eng.total_energy_pj = 0.0
-    eng.idle_energy_pj = 0.0
-    eng.corner_energy_pj = {}
-    eng.peak_concurrent = 0
-    eng.kv_reads_total = 0.0
-    eng.prefill_tokens_total = 0
-    eng.cached_prefix_tokens = 0
-    eng.shard_energy_pj[:] = 0.0
-    eng.shard_idle_energy_pj[:] = 0.0
-    eng.shard_corner_energy_pj = {}
-    eng.shard_kv_reads[:] = 0.0
-    eng.shard_occupancy[:] = 0
+    eng.reset_metrics()
 
 
-def run_poisson(cfg, params, *, rate_rps, n_requests, prompt_lo=6,
-                prompt_hi=20, max_new=12, batch=4, max_len=64, block_size=8,
-                max_pending=16, deadline_s=None, seed=0):
-    """One open-loop Poisson run on a fresh paged engine; returns metrics."""
-    eng = ServingEngine(cfg, params, batch_size=batch, max_len=max_len,
-                        seed=7, fresh_noise=False, paged=True,
-                        block_size=block_size)
+def run_poisson(spec, cfg, params, *, rate_rps, n_requests, prompt_lo=6,
+                prompt_hi=20, max_new=12, seed=0):
+    """One open-loop Poisson run on a fresh paged engine built from `spec`
+    (engine shape, admission bound, and deadline all come from the spec);
+    returns metrics."""
+    batch, max_len = spec.batch_size, spec.max_len
+    block_size = spec.block_size
+    max_pending, deadline_s = spec.max_pending, spec.deadline_s
+    eng = spec.build_engine(cfg, params)
     rng = np.random.default_rng(seed)
     _warmup(eng, cfg, rng, prompt_lo, prompt_hi, max_new, batch)
 
@@ -177,8 +166,7 @@ def run_poisson(cfg, params, *, rate_rps, n_requests, prompt_lo=6,
     # conservation incl. cancelled/timed-out partials: every result carries
     # the energy already billed to it, idle waste stays with the engine
     billed = sum(r.energy_pj for r in results)
-    conserved = bool(np.isclose(billed + eng.idle_energy_pj,
-                                eng.total_energy_pj, rtol=1e-6))
+    conserved = eng.energy_conserved(results)
     ttft = [h.ttft_s for h in handles if h.ttft_s is not None]
     itl = [d for h in handles for d in h.itl_s]
     return {
@@ -216,23 +204,19 @@ def run_poisson(cfg, params, *, rate_rps, n_requests, prompt_lo=6,
 def run_multihost_child(args):
     """One device count, inside the XLA_FLAGS-forced subprocess: serve the
     fixed workload on an n-shard engine, print the metrics JSON on stdout."""
-    import dataclasses
-
     n = args.multihost_child
     if jax.device_count() != n:
         raise SystemExit(f"multihost child expected {n} devices, got "
                          f"{jax.device_count()} — XLA_FLAGS not applied?")
-    cfg = get_config(args.arch, emt_mode=args.mode, smoke=True)
-    cfg = cfg.replace(dtype=jnp.float32)
+    batch = args.batch * n
     # per-row DAC scale: co-tenant occupancy cannot perturb tokens, so the
     # sharded runs are comparable token-for-token with the baseline
-    cfg = cfg.replace(emt=cfg.emt.replace(
-        quant=dataclasses.replace(cfg.emt.quant, a_per_row=True)))
+    spec = ServeSpec(arch=args.arch, mode=args.mode, smoke=True,
+                     a_per_row=True, batch_size=batch, max_len=64, seed=7,
+                     frozen_noise=True, paged=True, block_size=8, shards=n)
+    cfg = spec.build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
-    batch = args.batch * n
-    eng = ServingEngine(cfg, params, batch_size=batch, max_len=64, seed=7,
-                        fresh_noise=False, paged=True, block_size=8,
-                        n_shards=n)
+    eng = spec.build_engine(cfg, params)
     rng = np.random.default_rng(0)
     _warmup(eng, cfg, rng, 6, 20, args.max_new, batch)
 
@@ -281,8 +265,7 @@ def run_multihost_child(args):
         # min/max shard step-occupancy: 1.0 = perfectly balanced admission
         "occupancy_balance": round(float(occ.min()) / max(float(occ.max()),
                                                           1.0), 4),
-        "energy_conserved_with_partials": bool(np.isclose(
-            billed + eng.idle_energy_pj, eng.total_energy_pj, rtol=1e-6)),
+        "energy_conserved_with_partials": eng.energy_conserved(results),
         # the per-shard ledger split re-sums to the engine totals exactly
         "shard_split_conserved": bool(
             np.isclose(shard_e.sum(), eng.total_energy_pj, rtol=1e-9)
@@ -386,13 +369,14 @@ def main():
         print(json.dumps({"multihost": section}, indent=2))
         return
 
-    cfg = get_config(args.arch, emt_mode=args.mode, smoke=True)
-    cfg = cfg.replace(dtype=jnp.float32)
+    spec = ServeSpec(arch=args.arch, mode=args.mode, smoke=True,
+                     batch_size=args.batch, max_len=64, seed=7,
+                     frozen_noise=True, paged=True, block_size=8)
+    cfg = spec.build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
 
-    section = run_poisson(cfg, params, rate_rps=args.rate,
-                          n_requests=args.requests, max_new=args.max_new,
-                          batch=args.batch)
+    section = run_poisson(spec, cfg, params, rate_rps=args.rate,
+                          n_requests=args.requests, max_new=args.max_new)
     # overload: a near-burst (mean gap 2ms — far inside one engine step, so
     # arrivals outpace retirements on any machine; with warmup removing the
     # compile stalls, capacity-relative multipliers like "8x steady" turned
@@ -400,8 +384,8 @@ def main():
     # backpressure rejections, and deadline timeouts for whatever queues,
     # are the *expected* outcome here
     section["overload"] = run_poisson(
-        cfg, params, rate_rps=500.0, n_requests=32, max_new=args.max_new,
-        batch=args.batch, max_pending=4, deadline_s=0.75, seed=1)
+        spec.replace(max_pending=4, deadline_s=0.75), cfg, params,
+        rate_rps=500.0, n_requests=32, max_new=args.max_new, seed=1)
 
     report = {}
     if os.path.exists(args.out):

@@ -45,13 +45,12 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.models import lm
 from repro.nn.param import init_params
 from repro.serve.engine import ServingEngine, GenRequest, prefill_bucket
+from repro.serve.spec import ServeSpec
 
 
 def _requests(rng, vocab, n, max_new, mixed):
@@ -88,14 +87,7 @@ def run_workload(cfg, params, reqs, *, stagger, batch=None, max_len=None,
     for L in buckets:
         eng.submit(GenRequest(prompt=np.zeros(L, np.int32), max_new=deepest))
     eng.drain()
-    eng._steps = 0
-    eng.total_energy_pj = 0.0
-    eng.idle_energy_pj = 0.0
-    eng.corner_energy_pj = {}
-    eng.peak_concurrent = 0
-    eng.kv_reads_total = 0.0
-    eng.prefill_tokens_total = 0
-    eng.cached_prefix_tokens = 0
+    eng.reset_metrics()
     t0 = time.time()
     results = eng.serve(reqs, stagger=stagger)
     wall_s = time.time() - t0
@@ -206,10 +198,11 @@ def run_fused_compare(*, max_len=1024, block_size=16, batch=4, max_new=64,
     and clamped-view bucket later waves touch, and is dropped from the
     medians).
     """
-    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
-    cfg = cfg.replace(dtype=jnp.float32, d_model=256, num_heads=8,
-                      head_dim=32, d_ff=512, layer_pattern=("attn",),
-                      sliding_window=0)
+    cfg = ServeSpec(arch="gemma3-1b", mode="analog", smoke=True,
+                    all_global=True,
+                    model_overrides={"d_model": 256, "num_heads": 8,
+                                     "head_dim": 32, "d_ff": 512}
+                    ).build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     cont = ServingEngine(cfg, params, batch_size=batch, max_len=max_len)
     fused = ServingEngine(cfg, params, batch_size=batch, max_len=max_len,
@@ -252,14 +245,14 @@ def run_shared_prefix(*, n_requests=8, header_len=32, tail_len=32, max_new=8,
     contiguous engine on the same workload (frozen noise + per-row DAC scale,
     the repo's occupancy-independent analog setting).
     """
-    import dataclasses as _dc
-    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
     # prefix caching needs an all-global attention stack (ring K/V is
-    # positional and cannot be shared across requests)
-    cfg = cfg.replace(dtype=jnp.float32, layer_pattern=("attn",),
-                      sliding_window=0, paged_attn_impl="ref")
-    cfg = cfg.replace(emt=cfg.emt.replace(
-        quant=_dc.replace(cfg.emt.quant, a_per_row=True)))
+    # positional and cannot be shared across requests); per-row DAC scale
+    # keeps analog decode occupancy-independent for the identity check
+    spec = ServeSpec(arch="gemma3-1b", mode="analog", smoke=True,
+                     all_global=True, a_per_row=True, paged_attn_impl="ref",
+                     batch_size=batch, seed=7, frozen_noise=True,
+                     prefill_chunk=chunk)
+    cfg = spec.build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(11)
     header = rng.integers(0, cfg.vocab_size, header_len).astype(np.int32)
@@ -276,9 +269,7 @@ def run_shared_prefix(*, n_requests=8, header_len=32, tail_len=32, max_new=8,
                 for i, p in enumerate(prompts)]
 
     def mk_engine(**kw):
-        return ServingEngine(cfg, params, batch_size=batch, max_len=max_len,
-                             seed=7, fresh_noise=False, prefill_chunk=chunk,
-                             **kw)
+        return spec.replace(**kw).build_engine(cfg, params, max_len=max_len)
 
     out = {"arch": cfg.name + "-dense-attn", "n_requests": n_requests,
            "header_len": header_len, "tail_len": tail_len,
@@ -332,10 +323,11 @@ def run_shared_prefix(*, n_requests=8, header_len=32, tail_len=32, max_new=8,
 def run_mixed_placement(*, arch="moonshot-v1-16b-a3b", n_requests=8,
                         max_new=8, batch=4):
     """Heterogeneous placement serving: per-corner energy split + tok/s."""
-    cfg = get_config(arch, smoke=True, placement="mixed")
-    cfg = cfg.replace(dtype=jnp.float32)
+    spec = ServeSpec(arch=arch, placement="mixed", smoke=True,
+                     batch_size=batch, max_len=16 + max_new)
+    cfg = spec.build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, batch_size=batch, max_len=16 + max_new)
+    eng = spec.build_engine(cfg, params)
     rng = np.random.default_rng(3)
     reqs = _requests(rng, cfg.vocab_size, n_requests, max_new, mixed=True)
     out = {"arch": cfg.name, "placement": "mixed",
@@ -376,8 +368,7 @@ def main():
         args.max_new = min(args.max_new, 4)
         args.fused_max_len = min(args.fused_max_len, 256)
 
-    cfg = get_config(args.arch, emt_mode=args.mode, smoke=True)
-    cfg = cfg.replace(dtype=jnp.float32)
+    cfg = ServeSpec(arch=args.arch, mode=args.mode, smoke=True).build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     max_len = 16 + args.max_new
     rng = np.random.default_rng(0)

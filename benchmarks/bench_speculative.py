@@ -30,37 +30,30 @@ uJ/token improvement.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.placement import emt_for_corner
 from repro.models import lm
 from repro.nn.param import init_params
-from repro.serve.engine import ServingEngine, GenRequest
-from repro.serve.speculative import SpeculativeEngine
+from repro.serve.engine import GenRequest
+from repro.serve.spec import ServeSpec
 
 TARGET_CORNER = "pcm"
 DRAFT_CORNER = "sram_digital"
 
 
-def _cfg(arch: str, num_layers: int):
+def _spec(arch: str, num_layers: int, **kw) -> ServeSpec:
     # speculative decoding requires an all-global attention stack (rejected
     # drafts would clobber sliding-window ring K/V) and per-row DAC scales
     # (per-tensor activation quantization couples verify lanes, breaking
     # bit-identity with the 1-lane decode step)
-    cfg = get_config(arch, emt_mode="analog", smoke=True)
-    cfg = cfg.replace(dtype=jnp.float32, num_layers=num_layers,
-                      layer_pattern=("attn",), sliding_window=0)
-    tgt = emt_for_corner(TARGET_CORNER)
-    tgt = tgt.replace(quant=dataclasses.replace(tgt.quant, a_per_row=True))
-    return cfg.replace(emt=tgt)
+    return ServeSpec(arch=arch, mode="analog", device=TARGET_CORNER,
+                     smoke=True, all_global=True, a_per_row=True,
+                     model_overrides={"num_layers": num_layers}, **kw)
 
 
 def _requests(cfg, n, prompt_len, max_new):
@@ -78,9 +71,7 @@ def _run(eng, reqs):
     results = eng.serve(reqs)
     wall = time.monotonic() - t0
     tokens = sum(len(r.tokens) for r in results)
-    conserved = bool(np.isclose(
-        sum(r.energy_pj for r in results) + eng.idle_energy_pj,
-        eng.total_energy_pj, rtol=1e-6))
+    conserved = eng.energy_conserved(results)
     corners_ok = bool(np.isclose(sum(eng.corner_energy_pj.values()),
                                  eng.total_energy_pj, rtol=1e-6))
     return {
@@ -114,17 +105,17 @@ def main():
         # request draft short) and understate the static-energy amortization
         args.requests = min(args.requests, 4)
 
-    cfg = _cfg(args.arch, args.layers)
+    base_spec = _spec(args.arch, args.layers, batch_size=args.batch,
+                      max_len=args.prompt_len + args.max_new + 4, seed=7,
+                      frozen_noise=True)
+    cfg = base_spec.build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.max_new + 4
-    common = dict(batch_size=args.batch, max_len=max_len, seed=7,
-                  fresh_noise=False)
     reqs = _requests(cfg, args.requests, args.prompt_len, args.max_new)
 
-    base_eng = ServingEngine(cfg, params, **common)
+    base_eng = base_spec.build_engine(cfg, params)
     base = _run(base_eng, reqs)
-    spec_eng = SpeculativeEngine(cfg, params, draft_placement=DRAFT_CORNER,
-                                 spec_k=args.spec_k, **common)
+    spec_eng = base_spec.replace(draft_placement=DRAFT_CORNER,
+                                 spec_k=args.spec_k).build_engine(cfg, params)
     spec = _run(spec_eng, reqs)
 
     token_identity = all(

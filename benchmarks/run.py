@@ -213,6 +213,10 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench name(s) {unknown}; known: "
+                         f"{', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n](fast=args.fast)

@@ -23,15 +23,14 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.report import corner_table
-from repro.configs import get_config
 from repro.launch.serve import print_plan, print_attn_paths
 from repro.models import lm
 from repro.nn.param import init_params
-from repro.serve.engine import ServingEngine, GenRequest
+from repro.serve.engine import GenRequest
+from repro.serve.spec import ServeSpec
 
 
 def main():
@@ -47,8 +46,13 @@ def main():
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    base = get_config("gemma2-9b", emt_mode="ideal", smoke=True)
-    base = base.replace(dtype=jnp.float32)
+    # the execution variants share one ServeSpec skeleton — only the EMT
+    # surface (mode/device vs placement) differs per row
+    base_spec = ServeSpec(arch="gemma2-9b", smoke=True, batch_size=2,
+                          max_len=28, frozen_noise=True, paged=True,
+                          block_size=8,
+                          fused_paged_attn=args.fused_paged_attn)
+    base = base_spec.replace(mode="ideal").build_config()
     params = init_params(lm.specs(base), jax.random.PRNGKey(0))
     prompts = [rng.integers(0, base.vocab_size, size=12).astype(np.int32)
                for _ in range(4)]
@@ -56,13 +60,10 @@ def main():
     results = {}
     for mode in ("ideal", "analog", "bitserial", "mixed"):
         if mode == "mixed":
-            cfg = get_config("gemma2-9b", smoke=True,
-                             placement=args.placement)
+            spec = base_spec.replace(placement=args.placement)
         else:
-            cfg = get_config("gemma2-9b", emt_mode=mode, smoke=True,
-                             device=args.device)
-        cfg = cfg.replace(dtype=jnp.float32,
-                          fused_paged_attn=args.fused_paged_attn)
+            spec = base_spec.replace(mode=mode, device=args.device)
+        cfg = spec.build_config()
         if mode == "ideal":
             print_attn_paths(cfg)       # same resolution for every variant
         # ideal config has no rho params; analog/bitserial reuse ideal weights
@@ -81,8 +82,7 @@ def main():
                 jax.tree_util.tree_structure(p), leaves)
         # frozen noise: tokens depend only on the request, so the ideal-vs-
         # analog agreement below measures fluctuation, not seed drift
-        eng = ServingEngine(cfg, p, batch_size=2, max_len=28,
-                            fresh_noise=False, paged=True, block_size=8)
+        eng = spec.build_engine(cfg, p)
         reqs = [GenRequest(prompt=pr, max_new=12) for pr in prompts]
         t0 = time.time()
         res = eng.serve(reqs, stagger=2)              # backfills mid-decode

@@ -21,27 +21,27 @@ client sees:
 import threading
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.models import lm
 from repro.nn.param import init_params
-from repro.serve.engine import ServingEngine, GenRequest
+from repro.serve.engine import GenRequest
 from repro.serve.scheduler import RejectedError
 from repro.serve.server import StreamingServer
+from repro.serve.spec import ServeSpec
 
 
 def main():
-    cfg = get_config("gemma3-1b", emt_mode="analog", smoke=True)
-    cfg = cfg.replace(dtype=jnp.float32)
+    spec = ServeSpec(arch="gemma3-1b", mode="analog", smoke=True,
+                     batch_size=2, max_len=48, frozen_noise=True,
+                     paged=True, block_size=8)
+    cfg = spec.build_config()
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     mk = lambda n, **kw: GenRequest(  # noqa: E731
         prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32), **kw)
 
-    eng = ServingEngine(cfg, params, batch_size=2, max_len=48,
-                        fresh_noise=False, paged=True, block_size=8)
+    eng = spec.build_engine(cfg, params)
     # warm the jit caches so streamed latencies are serving, not compiling
     eng.submit(mk(12, max_new=16))
     eng.drain()

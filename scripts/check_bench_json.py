@@ -1,24 +1,34 @@
 """Validate the structure and invariants of the BENCH_*.json reports.
 
-The CI bench-smoke job runs the benchmark drivers in `--smoke` mode and then
-this checker.  A bench that crashes or silently drops a scenario fails the
-job.  Raw wall numbers are mostly not gated (CI runners are too noisy for
-tight thresholds — the checked-in reports carry those), with one deliberate
-exception: the fused-decode vs clamped-gather wall *ratio* at 100% occupancy
-is gated against a loose regression bound.  Both variants run in the same
-process seconds apart with interleaved round-robin timing, so the ratio is
-far more stable than either wall time — a breach means the one-launch fused
-path genuinely regressed relative to the fallback it replaces (the
-checked-in BENCH_kernels.json holds the tighter <= 1.05 acceptance number).
+The CI bench-smoke / matrix-smoke jobs run the benchmark drivers in
+``--smoke`` mode and then this checker.  A bench that crashes or silently
+drops a scenario fails the job.  Raw wall numbers are mostly not gated (CI
+runners are too noisy for tight thresholds — the checked-in reports carry
+those), with one deliberate exception: the fused-decode vs clamped-gather
+wall *ratio* at 100% occupancy is gated against a loose regression bound.
+Both variants run in the same process seconds apart with interleaved
+round-robin timing, so the ratio is far more stable than either wall time —
+a breach means the one-launch fused path genuinely regressed relative to
+the fallback it replaces (the checked-in BENCH_kernels.json holds the
+tighter <= 1.05 acceptance number).
 
 Structural byte invariants are exact and gated strictly: the prefill kernel
 must move strictly fewer analytic K/V bytes than the legacy materialized
 view in every benched case.
 
+Checks are a **declarative gate registry**: ``@gate("section")`` registers
+a checker that runs whenever that section appears in a report, so adding a
+scenario means adding one gate function — not threading a new branch
+through a monolithic ``check()``.  ``REQUIRED`` pins which sections each
+report file must contain (a dropped scenario fails even if every present
+section passes).
+
     python scripts/check_bench_json.py BENCH_serve.json BENCH_kernels.json
 """
 
 import json
+import math
+import os
 import sys
 
 REQUIRED = {
@@ -32,8 +42,12 @@ REQUIRED = {
         "poisson_load",
         "speculative",
         "multihost",
+        "matrix",
     ],
     "BENCH_kernels.json": ["shape", "cases", "prefill_cases", "ratios"],
+    # the standalone matrix-smoke artifact (benchmarks/matrix.py --smoke
+    # writes only its own section when pointed at a fresh file)
+    "BENCH_matrix.json": ["matrix"],
 }
 
 # loose-for-CI-noise regression bound on fused/gather_clamped at occ=100%
@@ -49,8 +63,32 @@ MULTIHOST_SPEEDUP_BOUND = 1.5
 MULTIHOST_SINGLE_CORE_FLOOR = 0.8
 MULTIHOST_BALANCE_BOUND = 0.5
 
+GATES = {}
 
-def check_poisson(path, poisson):
+
+def gate(section):
+    """Register ``fn(path, payload, report)`` as the checker for a report
+    section.  The function runs whenever `section` is present; it fails the
+    job by raising SystemExit.  One gate per section (re-registering is a
+    programming error, not an override)."""
+    def deco(fn):
+        if section in GATES:
+            raise ValueError(f"gate {section!r} registered twice")
+        GATES[section] = fn
+        return fn
+    return deco
+
+
+@gate("shared_prefix")
+def check_shared_prefix(path, shared, report=None):
+    """Prefix-cache section (bench_serve.py / matrix cells): the paged
+    cache-on/off runs must stay token-identical to the contiguous engine."""
+    if not shared.get("token_identity_paged_vs_contiguous", False):
+        raise SystemExit(f"{path}: shared_prefix broke token identity")
+
+
+@gate("poisson_load")
+def check_poisson(path, poisson, report=None):
     """Latency section (bench_latency.py): the percentile fields must exist
     and the steady-state p99 TTFT / inter-token latency must be finite and
     positive (raw magnitudes are machine-dependent and never gated).  The
@@ -58,8 +96,6 @@ def check_poisson(path, poisson):
     partials, and the overload sub-scenario must actually exercise
     backpressure or deadlines (otherwise the front-end silently queued
     unbounded)."""
-    import math
-
     for field in ("ttft_ms", "inter_token_ms"):
         stats = poisson.get(field)
         if not isinstance(stats, dict):
@@ -87,7 +123,8 @@ def check_poisson(path, poisson):
                              f"conservation with partials")
 
 
-def check_speculative(path, spec):
+@gate("speculative")
+def check_speculative(path, spec, report=None):
     """Speculative-decoding section (bench_speculative.py).  Gated hard:
     these are deterministic quantities (frozen noise, exact energy
     arithmetic), not wall numbers.  The accept rate must be a real rate in
@@ -96,8 +133,6 @@ def check_speculative(path, spec):
     conservation must hold; and — the paper-facing claim — at accept rate
     >= 0.5 speculation must record strictly lower analog-corner uJ/token
     than the non-speculative baseline."""
-    import math
-
     ar = spec.get("accept_rate")
     if not (isinstance(ar, (int, float)) and 0.0 < ar <= 1.0):
         raise SystemExit(f"{path}: speculative accept_rate must be in "
@@ -133,7 +168,8 @@ def check_speculative(path, spec):
             f"verify chunk stopped amortizing the static macro cost")
 
 
-def check_multihost(path, mh):
+@gate("multihost")
+def check_multihost(path, mh, report=None):
     """Data-parallel serving section (bench_latency.py --multihost).  The
     deterministic claims are gated hard: sharded runs must be token-identical
     to the single-device baseline at temperature 0, every device count must
@@ -141,8 +177,6 @@ def check_multihost(path, mh):
     admission must stay occupancy-balanced.  The weak-scaling speedup is
     gated at MULTIHOST_SPEEDUP_BOUND when the host has >= 2 cores (CI); on a
     1-core host only the serialization sanity floor applies."""
-    import math
-
     devices = mh.get("devices")
     if not isinstance(devices, dict):
         raise SystemExit(f"{path}: multihost missing devices map")
@@ -202,6 +236,106 @@ def check_multihost(path, mh):
             f"host — sharding overhead collapsed throughput")
 
 
+@gate("matrix")
+def check_matrix(path, m, report=None):
+    """Scenario-matrix frontier section (benchmarks/matrix.py).  Gated:
+
+    * every cell conserves energy (per-request + idle == total, partials
+      included) and carries finite positive throughput/energy metrics; the
+      accuracy proxy, when present, is a real accuracy in [0, 1];
+    * every identity group is token-identical (cells differing only along
+      the matrix's identity axes must decode the same tokens);
+    * the stored Pareto frontier matches a recomputation from the cells
+      (per EMT-surface group, none empty) — a stale or hand-edited
+      frontier fails, which is what makes the checked-in report's frontier
+      reviewable as the non-regression baseline;
+    * the legacy sections re-emitted from matrix cells pass the original
+      scenarios' gates, and at a >= 50% shared prefix the prefix cache must
+      still strictly reduce prefill tokens and uJ/token.
+    """
+    cells = m.get("cells")
+    if not (isinstance(cells, list) and cells):
+        raise SystemExit(f"{path}: matrix has no cells")
+    for c in cells:
+        cn = c.get("name", "?")
+        if not c.get("energy_conserved", False):
+            raise SystemExit(f"{path}: matrix cell {cn} broke per-request "
+                             f"+ idle == total energy conservation")
+        if c.get("token_identity") is False:
+            raise SystemExit(f"{path}: matrix cell {cn} broke token "
+                             f"identity within its identity group")
+        for field in ("decode_tok_per_s", "uj_per_token"):
+            v = c.get(field)
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v > 0):
+                raise SystemExit(f"{path}: matrix cell {cn}.{field} must be "
+                                 f"finite and positive, got {v!r}")
+        acc = c.get("accuracy_proxy")
+        if acc is not None and not (isinstance(acc, (int, float))
+                                    and 0.0 <= acc <= 1.0):
+            raise SystemExit(f"{path}: matrix cell {cn}.accuracy_proxy must "
+                             f"be in [0, 1], got {acc!r}")
+    for label, g in m.get("identity", {}).items():
+        if not g.get("identical", False):
+            raise SystemExit(f"{path}: matrix identity group {label!r} is "
+                             f"not token-identical: {g.get('cells')}")
+    frontier = m.get("frontier", {})
+    groups = frontier.get("groups")
+    if not isinstance(groups, dict) or not groups:
+        raise SystemExit(f"{path}: matrix frontier has no groups")
+    for label, g in groups.items():
+        if not g.get("pareto"):
+            raise SystemExit(f"{path}: matrix frontier group {label!r} has "
+                             f"an empty Pareto set")
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    from repro.analysis.frontier import frontier_report
+    recomputed = frontier_report(cells)["pareto_names"]
+    if recomputed != frontier.get("pareto_names"):
+        raise SystemExit(
+            f"{path}: matrix frontier is stale — stored Pareto set "
+            f"{frontier.get('pareto_names')} != recomputed {recomputed} "
+            f"from the cell metrics")
+    legacy = m.get("legacy", {})
+    if "poisson_load" in legacy:
+        check_poisson(path, legacy["poisson_load"], report)
+    sp = legacy.get("shared_prefix")
+    if sp is not None:
+        check_shared_prefix(path, sp, report)
+        if sp.get("shared_fraction", 0) >= 0.5:
+            for field in ("prefill_tokens_ratio", "uj_per_token_ratio"):
+                v = sp.get(field)
+                if not (isinstance(v, (int, float)) and v > 1.0):
+                    raise SystemExit(
+                        f"{path}: matrix shared-prefix cell stopped saving "
+                        f"— {field} {v!r} <= 1.0 at a "
+                        f"{sp['shared_fraction']:.0%} shared prefix")
+
+
+@gate("ratios")
+def check_kernel_ratios(path, ratios, report=None):
+    """Fused one-launch decode vs the clamped-gather fallback it replaced:
+    the interleaved wall ratio at 100% occupancy is gated loosely (see
+    module docstring)."""
+    ratio = ratios["fused_vs_gather_clamped"]["occ100_max"]
+    if ratio > FUSED_RATIO_BOUND:
+        raise SystemExit(
+            f"{path}: fused decode regressed — fused/gather_clamped at "
+            f"100% occupancy is {ratio} > bound {FUSED_RATIO_BOUND}")
+
+
+@gate("prefill_cases")
+def check_prefill_bytes(path, prefill_cases, report=None):
+    """Analytic K/V byte invariant: the prefill kernel must move strictly
+    fewer bytes than the legacy materialized view in every case."""
+    for c in prefill_cases:
+        moved = c["kv_bytes_moved"]
+        if moved["kernel"] >= moved["legacy_gather"]:
+            raise SystemExit(
+                f"{path}: prefill kernel must move strictly fewer K/V "
+                f"bytes than the materialized view: {c}")
+
+
 def check(path):
     with open(path) as f:
         report = json.load(f)
@@ -209,36 +343,11 @@ def check(path):
     missing = [k for k in REQUIRED.get(name, []) if k not in report]
     if missing:
         raise SystemExit(f"{path}: missing scenarios {missing}")
-    shared = report.get("shared_prefix")
-    if shared is not None:
-        if not shared.get("token_identity_paged_vs_contiguous", False):
-            raise SystemExit(f"{path}: shared_prefix broke token identity")
-    poisson = report.get("poisson_load")
-    if poisson is not None:
-        check_poisson(path, poisson)
-    spec = report.get("speculative")
-    if spec is not None:
-        check_speculative(path, spec)
-    mh = report.get("multihost")
-    if mh is not None:
-        check_multihost(path, mh)
-    if name == "BENCH_kernels.json":
-        ratio = report["ratios"]["fused_vs_gather_clamped"]["occ100_max"]
-        if ratio > FUSED_RATIO_BOUND:
-            raise SystemExit(
-                f"{path}: fused decode regressed — fused/gather_clamped at "
-                f"100% occupancy is {ratio} > bound {FUSED_RATIO_BOUND}")
-        for c in report["prefill_cases"]:
-            moved = c["kv_bytes_moved"]
-            if moved["kernel"] >= moved["legacy_gather"]:
-                raise SystemExit(
-                    f"{path}: prefill kernel must move strictly fewer K/V "
-                    f"bytes than the materialized view: {c}")
-        print(f"{path}: ok ({len(report['cases'])} decode + "
-              f"{len(report['prefill_cases'])} prefill cases, "
-              f"fused ratio {ratio} <= {FUSED_RATIO_BOUND})")
-        return
-    print(f"{path}: ok ({len(report)} sections)")
+    ran = [section for section, payload in report.items()
+           if section in GATES and GATES[section](path, payload, report)
+           is None]
+    print(f"{path}: ok ({len(report)} sections; gated: "
+          f"{', '.join(ran) or 'none'})")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,4 @@
 from repro.analysis.hlo import analyze_collectives, shape_bytes
 from repro.analysis.roofline import Roofline, model_flops, active_params
+from repro.analysis.frontier import (FRONTIER_AXES, dominates, pareto_front,
+                                     frontier_report, frontier_markdown)

@@ -1,0 +1,120 @@
+"""Trade-off frontier reduction over scenario-matrix cells.
+
+The paper's central claim is a *frontier*, not a point: accuracy vs energy
+efficiency under EMT instability (Fig. 9's traditional/A/A+B/A+B+C sweep),
+and — once the network is serving — decode throughput joins the trade as the
+third axis.  The matrix executor (benchmarks/matrix.py) emits one metrics
+dict per scenario cell; this module reduces those cells into the **Pareto
+frontier** over
+
+* ``decode_tok_per_s``  — higher is better (wall-clock, machine-dependent;
+  the frontier *membership* is what regressions gate on, not the values),
+* ``uj_per_token``      — lower is better (analytic EMT energy, exact),
+* ``accuracy_proxy``    — higher is better (ablation-harness deployment
+  accuracy of the cell's worst device corner; cells sharing an EMT surface
+  share the value).
+
+Cells are grouped by ``emt_label`` (the placement preset / pinned corner /
+single-corner mode) so the report answers the question the paper asks:
+*which placement wins at which operating point* — a frontier with one group
+collapsed to a dot means that placement is dominated everywhere.
+
+``frontier_report(cells)`` returns the JSON section stored under
+``BENCH_serve.json::matrix`` (per-group Pareto sets + dominated counts);
+``frontier_markdown(section)`` renders the human-readable table CI uploads
+as an artifact.  ``pareto_front`` is deliberately generic (maximize tuples)
+so gates and tests can recompute membership from the raw cells and compare.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+# metric key -> +1 maximize / -1 minimize; order fixes the report columns
+FRONTIER_AXES: Tuple[Tuple[str, int], ...] = (
+    ("decode_tok_per_s", +1),
+    ("uj_per_token", -1),
+    ("accuracy_proxy", +1),
+)
+
+
+def _score(cell: dict) -> Tuple[float, ...]:
+    """The maximize-tuple for one cell's metrics (missing axis -> -inf, so a
+    cell that failed to produce a metric can never enter the frontier)."""
+    out = []
+    for key, sign in FRONTIER_AXES:
+        v = cell.get(key)
+        out.append(-math.inf if v is None or not math.isfinite(float(v))
+                   else sign * float(v))
+    return tuple(out)
+
+
+def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
+    """True iff maximize-tuple `a` is >= `b` everywhere and > somewhere."""
+    return all(x >= y for x, y in zip(a, b)) and any(
+        x > y for x, y in zip(a, b))
+
+
+def pareto_front(scores: Iterable[Sequence[float]]) -> List[int]:
+    """Indices of the non-dominated members (maximize every coordinate).
+
+    Duplicated points all stay on the front (neither strictly dominates);
+    O(n^2) — matrix runs are tens of cells, not millions.
+    """
+    pts = [tuple(s) for s in scores]
+    return [i for i, p in enumerate(pts)
+            if not any(dominates(q, p) for j, q in enumerate(pts) if j != i)]
+
+
+def frontier_report(cells: List[dict]) -> dict:
+    """Reduce executor cell metrics into the ``matrix`` frontier section.
+
+    Each cell dict needs ``name``, ``emt_label`` and the FRONTIER_AXES
+    metrics.  Returns ``{"axes", "groups": {label: {"cells", "pareto",
+    "dominated"}}, "pareto_names"}`` — `pareto` lists cell names in frontier
+    order (descending tok/s), `pareto_names` is the flat union the
+    non-regression gate diffs against.
+    """
+    groups: Dict[str, List[dict]] = {}
+    for c in cells:
+        groups.setdefault(str(c.get("emt_label", "default")), []).append(c)
+    out_groups = {}
+    for label, members in sorted(groups.items()):
+        front = set(pareto_front([_score(c) for c in members]))
+        pareto = sorted((members[i] for i in front),
+                        key=lambda c: -(c.get("decode_tok_per_s") or 0.0))
+        out_groups[label] = {
+            "cells": len(members),
+            "pareto": [c["name"] for c in pareto],
+            "dominated": sorted(c["name"] for i, c in enumerate(members)
+                                if i not in front),
+        }
+    return {
+        "axes": [{"metric": k, "goal": "max" if s > 0 else "min"}
+                 for k, s in FRONTIER_AXES],
+        "groups": out_groups,
+        "pareto_names": sorted({n for g in out_groups.values()
+                                for n in g["pareto"]}),
+    }
+
+
+def frontier_markdown(cells: List[dict], section: dict) -> str:
+    """Human-readable frontier table (the CI artifact): one row per cell,
+    frontier members starred, grouped by emt_label."""
+    by_name = {c["name"]: c for c in cells}
+    rows = ["| group | cell | front | tok/s | uJ/token | acc proxy |",
+            "|" + "---|" * 6]
+
+    def fmt(v, nd):
+        return "-" if v is None else f"{float(v):.{nd}f}"
+
+    for label, g in sorted(section["groups"].items()):
+        names = g["pareto"] + g["dominated"]
+        for n in names:
+            c = by_name.get(n, {})
+            star = "*" if n in g["pareto"] else ""
+            rows.append(f"| {label} | {n} | {star} | "
+                        f"{fmt(c.get('decode_tok_per_s'), 1)} | "
+                        f"{fmt(c.get('uj_per_token'), 5)} | "
+                        f"{fmt(c.get('accuracy_proxy'), 4)} |")
+    return "\n".join(rows)

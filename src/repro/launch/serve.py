@@ -77,11 +77,12 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCHS, PLACEMENTS, get_config
+from repro.configs import ARCHS, PLACEMENTS
 from repro.models import lm
 from repro.models.attention import paged_attn_plan
 from repro.nn.param import init_params
-from repro.serve.engine import ServingEngine, GenRequest, prefill_bucket
+from repro.serve.engine import GenRequest, prefill_bucket
+from repro.serve.spec import ServeSpec
 
 
 def print_attn_paths(cfg):
@@ -115,6 +116,36 @@ def print_plan(cfg):
             run = []
         if path:
             run.append((path, corner, mode))
+
+
+def spec_from_args(args) -> ServeSpec:
+    """The launcher's CLI flags are thin aliases over :class:`ServeSpec` —
+    every knob lands in the shared spec (one validation surface for the
+    launcher, the examples, the benches, and the scenario matrix; see
+    docs/benchmarks.md)."""
+    return ServeSpec(
+        arch=args.arch, mode=args.mode, device=args.device,
+        placement=args.placement, smoke=args.smoke,
+        # speculation needs an all-global stack; the launcher coerces (with
+        # a printed notice in main()) instead of refusing
+        all_global=bool(args.draft_placement),
+        batch_size=args.batch,
+        max_len=prefill_bucket(args.prompt_len) + args.max_new,
+        seed=args.seed, frozen_noise=args.frozen_noise,
+        paged=args.paged, block_size=args.block_size,
+        num_blocks=args.kv_blocks, num_ring_blocks=args.kv_ring_blocks,
+        fused_paged_attn=args.fused_paged_attn,
+        paged_attn_impl=args.paged_attn_impl,
+        chunked_prefill=args.chunked_prefill,
+        prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache,
+        draft_placement=args.draft_placement, spec_k=args.spec_k,
+        energy_budget_uj=args.energy_budget_uj,
+        step_budget_uj=args.step_budget_uj,
+        shards=args.shards, max_pending=args.max_pending,
+        deadline_s=args.deadline_s,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        eos_id=args.eos_id)
 
 
 def serve_streaming(eng, reqs, *, rate, deadline_s, max_pending, seed=0):
@@ -214,69 +245,39 @@ def main():
     ap.add_argument("--max-pending", type=int, default=16,
                     help="admission-queue bound for --rate mode")
     args = ap.parse_args()
-    if args.placement and args.device:
-        ap.error("--placement and --device are mutually exclusive "
-                 "(a placement names its corners per layer)")
-    if args.shards > 1:
-        if jax.device_count() < args.shards:
-            ap.error(
-                f"--shards {args.shards} needs {args.shards} visible devices "
-                f"but only {jax.device_count()} present — on CPU simulate "
-                f"them with XLA_FLAGS=--xla_force_host_platform_device_"
-                f"count={args.shards} (must be set before jax starts)")
-        if args.batch % args.shards:
-            ap.error(f"--batch {args.batch} must be divisible by "
-                     f"--shards {args.shards}")
+    if args.shards > 1 and jax.device_count() < args.shards:
+        ap.error(
+            f"--shards {args.shards} needs {args.shards} visible devices "
+            f"but only {jax.device_count()} present — on CPU simulate "
+            f"them with XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={args.shards} (must be set before jax starts)")
+    try:
+        spec = spec_from_args(args)
         if args.draft_placement:
-            ap.error("--draft-placement is single-device for now (the draft "
-                     "shadow cache and verify step are not sharded)")
-
-    import jax.numpy as jnp
-    if args.placement:
-        cfg = get_config(args.arch, smoke=args.smoke,
-                         placement=args.placement)
-    else:
-        cfg = get_config(args.arch, emt_mode=args.mode, smoke=args.smoke,
-                         device=args.device)
-    cfg = cfg.replace(dtype=jnp.float32,
-                      fused_paged_attn=args.fused_paged_attn,
-                      paged_attn_impl=args.paged_attn_impl)
-    if args.draft_placement and cfg.sliding_window and "local" in cfg.blocks():
-        # speculation requires an all-global stack (rejected-draft writes
-        # would clobber sliding-window ring K/V — see SpeculativeEngine):
-        # swap the ring layers out of the serving config up front
-        cfg = cfg.replace(layer_pattern=("attn",), sliding_window=0)
-        print("speculative decoding: coerced attention stack to all-global "
-              "(ring layers are incompatible with rejected-draft writes)")
+            # speculation requires an all-global stack (rejected-draft
+            # writes would clobber sliding-window ring K/V — see
+            # SpeculativeEngine); the spec coerces via all_global, the
+            # launcher says so when the stack actually had ring layers
+            plain = spec.replace(draft_placement=None, all_global=False,
+                                 paged=False, prefix_cache=False)
+            c0 = plain.build_config()
+            if c0.sliding_window and "local" in c0.blocks():
+                print("speculative decoding: coerced attention stack to "
+                      "all-global (ring layers are incompatible with "
+                      "rejected-draft writes)")
+        cfg = spec.build_config()
+    except ValueError as e:
+        ap.error(str(e))
     print_plan(cfg)
     if args.paged:
         print_attn_paths(cfg)
     params = init_params(lm.specs(cfg), jax.random.PRNGKey(0))
     n_req = args.requests or args.batch
-    controller = None
-    if args.step_budget_uj is not None or args.energy_budget_uj is not None:
-        from repro.serve.control import EnergyBudgetController
-        controller = EnergyBudgetController(step_budget_uj=args.step_budget_uj)
-    common_kw = dict(
-        batch_size=args.batch,
-        max_len=prefill_bucket(args.prompt_len) + args.max_new,
-        seed=args.seed, fresh_noise=not args.frozen_noise,
-        paged=args.paged, block_size=args.block_size,
-        num_blocks=args.kv_blocks,
-        num_ring_blocks=args.kv_ring_blocks,
-        chunked_prefill=args.chunked_prefill,
-        prefill_chunk=args.prefill_chunk,
-        prefix_cache=args.prefix_cache, controller=controller,
-        n_shards=args.shards)
+    eng = spec.build_engine(cfg, params)
+    controller = eng.controller
     if args.draft_placement:
-        from repro.serve.speculative import SpeculativeEngine
-        eng = SpeculativeEngine(cfg, params,
-                                draft_placement=args.draft_placement,
-                                spec_k=args.spec_k, **common_kw)
         print(f"speculative decoding: draft on {args.draft_placement}, "
               f"k={args.spec_k}")
-    else:
-        eng = ServingEngine(cfg, params, **common_kw)
     print(f"prefill path: "
           f"{'chunked (exact positions, mixed step)' if eng.chunked else 'legacy (batch-1 pow2 buckets)'}"
           + (f", chunk={eng.prefill_chunk}, prefix_cache=on"

@@ -8,3 +8,4 @@ from repro.serve.kv_pool import BlockPool, PagedKV
 from repro.serve.scheduler import RejectedError, Scheduler, Slot
 from repro.serve.sampling import sample_tokens
 from repro.serve.server import RequestHandle, StreamingServer
+from repro.serve.spec import MatrixSpec, ScenarioSpec, ServeSpec

@@ -1268,6 +1268,56 @@ class ServingEngine:
             last = snap
         return out
 
+    # -- metrics -------------------------------------------------------------
+    def reset_metrics(self):
+        """Zero every accounting counter (energy ledgers, shard splits,
+        kv-read/prefill totals, occupancy integrals, the noise clock and the
+        concurrency high-water mark) without touching serving state.
+
+        This is the between-phases reset the benches need after warmup: the
+        compiled steps, pools and scheduler stay live, only the books open
+        fresh.  Requires an idle engine — resetting mid-flight would break
+        per-request + idle == total conservation for in-flight requests."""
+        assert not self.scheduler.busy, "reset_metrics() requires an idle engine"
+        self.total_energy_pj = 0.0
+        self.idle_energy_pj = 0.0
+        self.corner_energy_pj = {}
+        self.shard_energy_pj[:] = 0.0
+        self.shard_idle_energy_pj[:] = 0.0
+        self.shard_corner_energy_pj = {}
+        self.shard_kv_reads[:] = 0.0
+        self.shard_occupancy[:] = 0
+        self._steps = 0
+        self.peak_concurrent = 0
+        self.kv_reads_total = 0.0
+        self.prefill_tokens_total = 0
+        self.cached_prefix_tokens = 0
+
+    def metrics(self) -> dict:
+        """Plain-python snapshot of the accounting counters (JSON-safe)."""
+        return {
+            "total_energy_pj": float(self.total_energy_pj),
+            "idle_energy_pj": float(self.idle_energy_pj),
+            "corner_energy_pj": {k: float(v)
+                                 for k, v in self.corner_energy_pj.items()},
+            "shard_energy_pj": [float(v) for v in self.shard_energy_pj],
+            "shard_idle_energy_pj": [float(v)
+                                     for v in self.shard_idle_energy_pj],
+            "shard_occupancy": [int(v) for v in self.shard_occupancy],
+            "steps": int(self._steps),
+            "peak_concurrent": int(self.peak_concurrent),
+            "kv_reads_total": float(self.kv_reads_total),
+            "prefill_tokens_total": int(self.prefill_tokens_total),
+            "cached_prefix_tokens": int(self.cached_prefix_tokens),
+        }
+
+    def energy_conserved(self, results, rtol: float = 1e-6) -> bool:
+        """Per-request billed + idle waste == engine total (the conservation
+        invariant, including partial/shed/cancelled results)."""
+        billed = float(sum(r.energy_pj for r in results))
+        return bool(np.isclose(billed + self.idle_energy_pj,
+                               self.total_energy_pj, rtol=rtol))
+
     # -- batch-mode wrapper --------------------------------------------------
     def generate(self, requests):
         """Submit `requests` together and drain. Returns (token arrays in

@@ -159,6 +159,31 @@ class SpeculativeEngine(ServingEngine):
     def accept_rate(self) -> float:
         return self.spec_accepted_total / max(1, self.spec_proposed_total)
 
+    # -- metrics -------------------------------------------------------------
+    def reset_metrics(self):
+        super().reset_metrics()
+        self.draft_total_energy_pj = 0.0
+        self.draft_idle_energy_pj = 0.0
+        self.draft_steps = 0
+        self.spec_rounds = 0
+        self.spec_proposed_total = 0
+        self.spec_accepted_total = 0
+        self.accept_len_hist[:] = 0
+
+    def metrics(self) -> dict:
+        m = super().metrics()
+        m.update(
+            draft_total_energy_pj=float(self.draft_total_energy_pj),
+            draft_idle_energy_pj=float(self.draft_idle_energy_pj),
+            draft_steps=int(self.draft_steps),
+            spec_rounds=int(self.spec_rounds),
+            spec_proposed_total=int(self.spec_proposed_total),
+            spec_accepted_total=int(self.spec_accepted_total),
+            accept_rate=float(self.accept_rate),
+            accept_len_hist=[int(v) for v in self.accept_len_hist],
+        )
+        return m
+
     # -- draft-side bookkeeping ----------------------------------------------
     def _book_draft_step(self, eaux, rows, prefill_rows=frozenset()) -> float:
         """Book one draft-placement step into the combined ledger (so the

@@ -1,0 +1,214 @@
+"""Declarative serving specs + scenario matrix: round-trip, validation,
+expansion, frontier reduction, and a 2-cell executor smoke.
+
+The spec family (repro.serve.spec) is the single config surface every
+serving driver builds through; these tests pin the API redesign's contract:
+dict/JSON round-trip with hard unknown-key rejection, invalid combinations
+rejected at spec time (not deep inside engine construction), deterministic
+matrix expansion, and the executor emitting conserved, frontier-reducible
+cell metrics.
+"""
+import json
+
+import pytest
+
+from repro.analysis.frontier import (dominates, frontier_report,
+                                     pareto_front)
+from repro.serve.spec import (MatrixSpec, ScenarioSpec, ServeSpec,
+                              PAGED_ATTN_IMPLS)
+
+
+# ---------------------------------------------------------------- ServeSpec
+
+def test_serve_spec_round_trip():
+    spec = ServeSpec(arch="gemma3-1b", mode="analog", all_global=True,
+                     a_per_row=True, batch_size=2, max_len=32, paged=True,
+                     block_size=8, prefix_cache=True, frozen_noise=True,
+                     model_overrides={"num_layers": 2})
+    d = spec.to_dict()
+    assert json.loads(json.dumps(d)) == d          # JSON-safe
+    assert ServeSpec.from_dict(d) == spec
+    assert spec.replace(batch_size=4).batch_size == 4
+    assert spec.emt_label == "analog"
+    assert spec.replace(device="pcm").emt_label == "pcm"
+
+
+def test_serve_spec_unknown_key_rejected():
+    with pytest.raises(ValueError, match="unknown ServeSpec keys"):
+        ServeSpec.from_dict({"arch": "gemma3-1b", "nope": 1})
+
+
+def test_serve_spec_impl_list_matches_kernels():
+    from repro.kernels.ops import PAGED_ATTN_IMPLS as KERNEL_IMPLS
+    assert tuple(KERNEL_IMPLS) == PAGED_ATTN_IMPLS
+
+
+@pytest.mark.parametrize("kw", [
+    dict(mode="quantum"),
+    dict(paged_attn_impl="cuda"),
+    dict(placement="mixed", device="pcm"),
+    dict(prefix_cache=True),                       # needs paged
+    dict(batch_size=3, shards=2),
+    dict(draft_placement="sram_digital", temperature=0.7),
+    dict(draft_placement="sram_digital", shards=2, batch_size=4),
+    dict(draft_placement="sram_digital", paged=True, prefix_cache=True),
+    dict(top_p=0.0),
+    dict(deadline_s=0.0),
+    dict(energy_budget_uj=-1.0),
+])
+def test_serve_spec_invalid_combinations(kw):
+    with pytest.raises(ValueError):
+        ServeSpec(**kw)
+
+
+def test_prefix_cache_on_ring_stack_rejected():
+    # gemma3-1b has sliding-window ring layers: prefix caching must be
+    # rejected at config resolution unless the stack is coerced all-global
+    spec = ServeSpec(arch="gemma3-1b", smoke=True, paged=True,
+                     prefix_cache=True)
+    with pytest.raises(ValueError, match="all-global"):
+        spec.build_config()
+    cfg = spec.replace(all_global=True).build_config()
+    assert cfg.sliding_window == 0 and "local" not in cfg.blocks()
+
+
+def test_build_config_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown arch"):
+        ServeSpec(arch="gpt-17").build_config()
+    with pytest.raises(ValueError, match="unknown placement"):
+        ServeSpec(placement="everything-on-pcm").build_config()
+    with pytest.raises(ValueError, match="unknown device"):
+        ServeSpec(device="memristor-9000").build_config()
+
+
+# ------------------------------------------------------------- ScenarioSpec
+
+def test_scenario_spec_round_trip_and_coords():
+    cell = ScenarioSpec(name="c", serve=ServeSpec(batch_size=2),
+                        arrival="stagger", stagger=2, n_requests=4,
+                        prompt_lo=16, prompt_hi=16, shared_prefix_ratio=0.5,
+                        max_new=4, coords=(("kv", "paged"), ("shared", "0.5")))
+    d = cell.to_dict()
+    assert json.loads(json.dumps(d)) == d
+    assert ScenarioSpec.from_dict(d) == cell
+    assert cell.header_len == 8
+    assert cell.coord("kv") == "paged"
+    assert cell.group_key(drop_axes=("kv",)) == (("shared", "0.5"),)
+    with pytest.raises(ValueError, match="unknown ScenarioSpec keys"):
+        ScenarioSpec.from_dict({"n_requests": 4, "arrivals": "poisson"})
+
+
+@pytest.mark.parametrize("kw", [
+    dict(arrival="burst"),
+    dict(arrival="poisson", rate_rps=0.0),
+    dict(arrival="stagger", stagger=0),
+    dict(prompt_lo=8, prompt_hi=4),
+    dict(shared_prefix_ratio=1.0),
+    dict(n_requests=0),
+])
+def test_scenario_spec_invalid(kw):
+    with pytest.raises(ValueError):
+        ScenarioSpec(**kw)
+
+
+# --------------------------------------------------------------- MatrixSpec
+
+def _toggle(label, **set_):
+    return {"label": label,
+            "set": {k.replace("__", "."): v for k, v in set_.items()}}
+
+
+def test_matrix_expansion_counts_and_names():
+    base = ScenarioSpec(name="grid", serve=ServeSpec())
+    extra = ScenarioSpec(name="poisson", arrival="poisson", rate_rps=4.0)
+    m = MatrixSpec(
+        name="m", base=base,
+        axes={"shared_prefix_ratio": (0.0, 0.5),
+              "kv": (_toggle("contig", serve__paged=False),
+                     _toggle("paged", serve__paged=True),
+                     _toggle("prefix", serve__paged=True,
+                             serve__prefix_cache=True))},
+        identity_axes=("kv",), extra_cells=(extra,))
+    assert m.n_cells == 2 * 3 + 1
+    cells = m.expand()
+    assert len(cells) == 7
+    assert len({c.name for c in cells}) == 7
+    grid = [c for c in cells if c.coords]
+    assert all(c.name.startswith("grid/") for c in grid)
+    # the dotted-path axis landed in the scenario, the toggle in the serve
+    pc = next(c for c in grid if c.coord("kv") == "prefix"
+              and c.coord("shared_prefix_ratio") == "0.5")
+    assert pc.shared_prefix_ratio == 0.5 and pc.serve.prefix_cache
+    # identity groups: same non-identity coords, one per kv value
+    groups = {}
+    for c in grid:
+        groups.setdefault(c.group_key(m.identity_axes), []).append(c)
+    assert len(groups) == 2 and all(len(v) == 3 for v in groups.values())
+
+
+def test_matrix_round_trip_and_validation():
+    m = MatrixSpec(name="m", base=ScenarioSpec(),
+                   axes={"max_new": (4, 8)}, identity_axes=())
+    assert MatrixSpec.from_dict(json.loads(json.dumps(m.to_dict()))) == m
+    with pytest.raises(ValueError, match="identity axis"):
+        MatrixSpec(axes={"max_new": (4,)}, identity_axes=("kv",))
+    with pytest.raises(ValueError, match="unknown field"):
+        MatrixSpec(axes={"max_old": (4, 8)}).expand()
+    # invalid axis value fails at expansion (cells are validated specs)
+    with pytest.raises(ValueError, match="arrival"):
+        MatrixSpec(axes={"arrival": ("lockstep", "burst")}).expand()
+
+
+# ----------------------------------------------------------------- frontier
+
+def test_pareto_front_basics():
+    assert dominates((2.0, 1.0), (1.0, 1.0))
+    assert not dominates((2.0, 0.5), (1.0, 1.0))
+    pts = [(1.0, 1.0), (2.0, 0.5), (0.5, 2.0), (0.4, 0.4)]
+    assert sorted(pareto_front(pts)) == [0, 1, 2]
+    # duplicates both survive; missing metrics never enter the front
+    assert sorted(pareto_front([(1.0, 1.0), (1.0, 1.0)])) == [0, 1]
+    rep = frontier_report([
+        {"name": "a", "emt_label": "analog", "decode_tok_per_s": 10.0,
+         "uj_per_token": 1.0, "accuracy_proxy": 0.5},
+        {"name": "b", "emt_label": "analog", "decode_tok_per_s": 5.0,
+         "uj_per_token": 2.0, "accuracy_proxy": 0.5},
+        {"name": "c", "emt_label": "analog", "decode_tok_per_s": None,
+         "uj_per_token": 0.1, "accuracy_proxy": 0.9},
+    ])
+    assert rep["groups"]["analog"]["pareto"] == ["a", "c"]
+    assert rep["pareto_names"] == ["a", "c"]
+    assert "b" in rep["groups"]["analog"]["dominated"]
+
+
+# ------------------------------------------------------- executor (2 cells)
+
+def test_two_cell_executor_smoke():
+    """Contiguous vs paged on the same tiny workload: both cells conserve
+    energy, the identity axis holds, and the frontier is non-empty."""
+    from benchmarks.matrix import run_matrix
+
+    serve = ServeSpec(arch="gemma3-1b", mode="analog", smoke=True,
+                      all_global=True, a_per_row=True, frozen_noise=True,
+                      batch_size=2, paged_attn_impl="ref",
+                      model_overrides={"num_layers": 2})
+    base = ScenarioSpec(name="tiny", serve=serve, arrival="lockstep",
+                        n_requests=2, prompt_lo=8, prompt_hi=8, max_new=2,
+                        workload_seed=3)
+    m = MatrixSpec(
+        name="tiny-matrix", base=base,
+        axes={"kv": (_toggle("contiguous", serve__paged=False),
+                     _toggle("paged", serve__paged=True,
+                             serve__block_size=8))},
+        identity_axes=("kv",))
+    section = run_matrix(m, with_proxy=False, verbose=False)
+    assert len(section["cells"]) == 2
+    for cell in section["cells"]:
+        assert cell["energy_conserved"] is True
+        assert cell["token_identity"] is True
+        assert cell["tokens"] == 2 * 2
+        assert cell["uj_per_token"] > 0
+    assert all(g["identical"] for g in section["identity"].values())
+    assert section["frontier"]["pareto_names"]    # non-empty Pareto set
+    # the section is JSON-serializable as stored in BENCH_serve.json
+    json.dumps(section)
